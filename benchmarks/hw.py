@@ -1,0 +1,21 @@
+"""Target-hardware model: TPU v5e constants used for all roofline math.
+
+This container is CPU-only; the dry-run supplies compiled-graph statistics
+(FLOPs, bytes, collective bytes) and these constants convert them into
+roofline *seconds* per the assignment:
+
+    compute term    = HLO_FLOPs   / (chips x PEAK_FLOPS)
+    memory term     = HLO_bytes   / (chips x HBM_BW)
+    collective term = coll_bytes  / (chips x ICI_BW)
+"""
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (assume 1 busy link per op)
+
+CHIPS_SINGLE = 256        # 16 x 16 pod
+CHIPS_MULTI = 512         # 2 pods
+
+# GPU reference for paper-scale comparisons (A100-40G, paper's testbed)
+A100_FLOPS_F32 = 19.5e12
+A100_HBM = 1555e9

@@ -1,0 +1,119 @@
+"""Assemble EXPERIMENTS.md tables from dry-run / perf / svd artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > results/experiments_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import hw, roofline
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | kind | n_micro | loss_chunks | lower (s) | "
+        "compile (s) | args GB/chip | temp GB/chip | out GB/chip | "
+        "collective GB/chip |",
+        "|" + "---|" * 11,
+    ]
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun", "*.json"))):
+        d = json.load(open(path))
+        if d.get("mesh") != mesh:
+            continue
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | skip | — | — | — | "
+                         f"— | — | — | — | — |")
+            continue
+        if "error" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | ERROR "
+                         f"| | | | | | | | |")
+            continue
+        f = d["full"]
+        coll = (d.get("composed", {}).get("collective_bytes_total")
+                or f.get("collective_bytes_total", 0))
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['kind']} | "
+            f"{d.get('n_micro', '—')} | {d.get('loss_chunks', '—')} | "
+            f"{d.get('lower_s', 0)} | {f.get('compile_s', 0)} | "
+            f"{f.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{f.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{f.get('output_size_in_bytes', 0)/1e9:.2f} | "
+            f"{coll/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "perf", "*.json"))):
+        name = os.path.basename(path)[:-5]
+        d = json.load(open(path))
+        if "error" in d:
+            rows.append((name, None, d["error"][:80]))
+            continue
+        src = d.get("composed") or d.get("full", {})
+        full = d.get("full", {})
+        rows.append((name, {
+            "flops": src.get("flops", 0),
+            "bytes": src.get("bytes_accessed", 0),
+            "coll": src.get("collective_bytes_total", 0),
+            "temp": full.get("temp_size_in_bytes", 0),
+            "n_micro": d.get("n_micro"),
+        }, None))
+    lines = ["| experiment | n_micro | t_comp (s) | t_mem (s) | t_coll (s) "
+             "| temp GB/chip |", "|" + "---|" * 6]
+    for name, r, err in rows:
+        if err:
+            lines.append(f"| {name} | ERROR: {err} | | | | |")
+            continue
+        lines.append(
+            f"| {name} | {r['n_micro']} | "
+            f"{r['flops']/hw.PEAK_FLOPS:.3f} | "
+            f"{r['bytes']/hw.HBM_BW:.3f} | "
+            f"{r['coll']/hw.ICI_BW:.3f} | {r['temp']/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def svd_table() -> str:
+    path = os.path.join(RESULTS, "svd_dryrun.json")
+    if not os.path.exists(path):
+        return "(svd_dryrun.json not generated yet)"
+    d = json.load(open(path))
+    lines = ["| variant | GFLOPs/chip | bytes GB/chip | collective MB/chip | "
+             "t_comp (ms) | t_coll (ms) | collectives |",
+             "|" + "---|" * 7]
+    for tag, r in d.items():
+        coll = r.get("collective_bytes_total", 0)
+        fl = r.get("flops", 0)
+        by = r.get("bytes_accessed", 0)
+        kinds = {k: round(v / 1e6, 1)
+                 for k, v in r.get("collective_bytes", {}).items() if v}
+        lines.append(
+            f"| {tag} | {fl/1e9:.1f} | {by/1e9:.2f} | {coll/1e6:.1f} | "
+            f"{fl/hw.PEAK_FLOPS*1e3:.2f} | {coll/hw.ICI_BW*1e3:.2f} | "
+            f"{kinds} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## §Dry-run — single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## §Roofline — single-pod\n")
+    cells = roofline.load_cells()
+    print(roofline.fmt_table(cells, "single"))
+    print("\n## §Roofline — multi-pod\n")
+    print(roofline.fmt_table(cells, "multi"))
+    print("\n## §Perf — hillclimb experiments\n")
+    print(perf_table())
+    print("\n## §Perf — SVD power-step variants (paper 1TB dense problem)\n")
+    print(svd_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh).
+
+Reads the dry-run JSONs (results/dryrun/*.json) and emits the table the
+assignment requires:
+
+  compute term    = HLO_FLOPs  / (chips x 197 TF/s)
+  memory term     = HLO_bytes  / (chips x 819 GB/s)
+  collective term = coll_bytes / (chips x 50 GB/s)
+
+HLO statistics are per-chip already (cost analysis of the post-SPMD
+module).  ``composed`` totals undo XLA's count-scan-body-once behaviour
+(see launch/dryrun.py docstring).  For prefill cells the q-chunked
+attention scan is additionally re-expanded analytically
+(``attn_q_chunks`` recorded per cell).
+
+Also reports MODEL_FLOPS (6·N_active·D for train, 2·N_active·D + exact
+attention term otherwise) and the MODEL/HLO ratio that exposes remat /
+redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import hw
+from repro.configs import SHAPES, get_config
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def _attn_flops_fwd(cfg, S, B, cache_T=None):
+    """Exact attention quadratic FLOPs (fwd), all layers, global."""
+    Dh = cfg.resolved_head_dim
+    H = cfg.num_heads
+    total = 0
+    for kind in cfg.blocks:
+        if kind == "attn":
+            T = cache_T if cache_T is not None else S
+            eff = T if cache_T is not None else S / 2  # causal half
+            total += 4 * B * S * eff * H * Dh
+        elif kind == "local":
+            T = min(cfg.window, cache_T if cache_T is not None else S)
+            total += 4 * B * S * T * H * Dh
+    return total
+
+
+def model_flops(arch, shape):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    N = cfg.active_param_count()
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        tokens = B * S
+        return 6 * N * tokens + 3 * _attn_flops_fwd(cfg, S, B)
+    if cell.kind == "prefill":
+        tokens = B * S
+        return 2 * N * tokens + _attn_flops_fwd(cfg, S, B)
+    # decode: one token per sequence against a cache of S
+    return 2 * N * B + _attn_flops_fwd(cfg, 1, B, cache_T=S)
+
+
+def _adjust_attn_chunks(rec, arch, shape, chips):
+    """Re-expand the q-chunk attention scan that HLO counted once."""
+    nc = rec.get("attn_q_chunks", 1)
+    if nc <= 1:
+        return 0.0
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    attn = _attn_flops_fwd(cfg, cell.seq_len, cell.global_batch)
+    return attn * (nc - 1) / nc / chips
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        rec = json.load(open(path))
+        if "error" in rec or "skipped" in rec:
+            cells.append(rec)
+            continue
+        chips = hw.CHIPS_MULTI if rec["mesh"] == "multi" else hw.CHIPS_SINGLE
+        src = rec.get("composed") or rec["full"]
+        flops = src.get("flops", rec["full"].get("flops", 0.0))
+        flops += _adjust_attn_chunks(rec, rec["arch"], rec["shape"], chips)
+        bytes_acc = src.get("bytes_accessed",
+                            rec["full"].get("bytes_accessed", 0.0))
+        coll = src.get("collective_bytes_total",
+                       rec["full"].get("collective_bytes_total", 0.0))
+        t_comp = flops / hw.PEAK_FLOPS
+        t_mem = bytes_acc / hw.HBM_BW
+        t_coll = coll / hw.ICI_BW
+        dom = max((("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll)), key=lambda kv: kv[1])[0]
+        mf = model_flops(rec["arch"], rec["shape"]) / chips
+        rec["roofline"] = {
+            "chips": chips,
+            "flops_per_chip": flops,
+            "bytes_per_chip": bytes_acc,
+            "coll_bytes_per_chip": coll,
+            "t_compute": t_comp,
+            "t_memory": t_mem,
+            "t_collective": t_coll,
+            "dominant": dom,
+            "model_flops_per_chip": mf,
+            "useful_ratio": mf / flops if flops else 0.0,
+            "roofline_fraction": (
+                mf / hw.PEAK_FLOPS) / max(t_comp, t_mem, t_coll)
+            if max(t_comp, t_mem, t_coll) > 0 else 0.0,
+        }
+        cells.append(rec)
+    return cells
+
+
+def fmt_table(cells, mesh="single"):
+    lines = []
+    hdr = (f"| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           f"| MODEL/HLO | roofline frac |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 8)
+    for rec in cells:
+        if rec.get("mesh") != mesh:
+            continue
+        if "skipped" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped (full attn @512k) | — | — |")
+            continue
+        if "error" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | "
+                         f"{rec['error'][:60]} | | |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = True):
+    cells = load_cells()
+    done = [c for c in cells if "roofline" in c]
+    print(f"\n== Roofline ({len(done)} compiled cells) ==")
+    for mesh in ("single", "multi"):
+        sub = [c for c in cells if c.get("mesh") == mesh]
+        if not sub:
+            continue
+        print(f"\n-- mesh: {mesh} --")
+        print(fmt_table(cells, mesh))
+    out = os.path.join(os.path.dirname(RESULTS), "roofline.md")
+    with open(out, "w") as f:
+        for mesh in ("single", "multi"):
+            f.write(f"\n### mesh: {mesh}\n\n")
+            f.write(fmt_table(cells, mesh) + "\n")
+    print(f"\nwritten {out}")
+    return {"cells": len(done)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+fault-tolerant checkpointing and the paper's SVD gradient compression.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--arch qwen3-0.6b]
+    PYTHONPATH=src python examples/train_lm.py --steps 50 --tiny   # smoke
+
+The default config is a ~100M-param qwen3-family model (the assignment's
+"train ~100M model for a few hundred steps" deliverable).  Loss drops on
+the synthetic bigram stream; compression stats are logged when enabled.
+"""
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import CompressionConfig
+from repro.training import TrainConfig
+from repro.training.runner import RunnerConfig, TrainingRunner
+
+
+def model_100m() -> ModelConfig:
+    # qwen3-family, scaled to ~100M params
+    return dataclasses.replace(
+        get_config("qwen3-0.6b"), name="qwen3-100m", num_layers=8,
+        d_model=512, num_heads=8, num_kv_heads=4, head_dim=64, d_ff=1536,
+        vocab_size=32768, dtype="float32")
+
+
+def model_tiny() -> ModelConfig:
+    return dataclasses.replace(
+        model_100m(), name="tiny", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512)
+
+
+def main():
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--compress", action="store_true",
+                    help="enable SVD gradient compression (paper technique)")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+
+    tc = TrainConfig(
+        adamw=AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
+        compression=CompressionConfig(enabled=args.compress, rank=8,
+                                      min_size=65536),
+        microbatches=1,
+    )
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    rc = RunnerConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    runner = TrainingRunner(cfg, tc, rc, dc)
+    runner.run()
+    losses = [h["loss"] for h in runner.history]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Atomic, elastic checkpointing for fault-tolerant training.
+
+Properties required at 1000+ nodes, all present here in miniature:
+
+* **atomicity** — write to ``step_XXXX.tmp`` then ``os.replace`` so a
+  crash mid-save never corrupts the latest-good checkpoint;
+* **elastic restore** — arrays are saved topology-free (host numpy) and
+  restored via ``device_put`` onto *whatever* mesh/shardings the new job
+  uses — a 512-chip checkpoint restores onto 256 chips (tests exercise a
+  mesh change);
+* **step-resumable data** — the data pipeline is (seed, step)-pure, so
+  storing the step counter alone resumes the exact token stream;
+* **retention** — keeps the newest ``keep`` checkpoints.
+
+At real scale the host-gather becomes per-shard writes into a parallel
+store (tensorstore/OCDBT); the manager interface (save/restore/latest)
+is the part the rest of the framework depends on and stays unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    keys = ["/".join(str(k) for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save / restore ------------------------------------------------------
+
+    def save(self, step: int, state) -> str:
+        keys, vals, _ = _flatten(state)
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {}
+        for k, v in zip(keys, vals):
+            a = np.asarray(jax.device_get(v))
+            if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+                # npz can't serialize ml_dtypes; bf16 -> f32 is lossless
+                # and restore casts back to the target dtype.
+                import jax.numpy as jnp
+                a = np.asarray(jnp.asarray(v).astype(jnp.float32))
+            arrays[k] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "keys": keys}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of ``like`` (a matching pytree).
+
+        ``shardings`` — optional matching pytree of NamedShardings for the
+        *target* mesh (elastic restore onto a different topology).
+        """
+        path = self._step_dir(step)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            keys, vals, treedef = _flatten(like)
+            restored = []
+            for k, v in zip(keys, vals):
+                arr = data[k]
+                restored.append(arr)
+        tree = jax.tree.unflatten(treedef, restored)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            # cast via jnp: numpy lacks native bf16 cast paths (ml_dtypes)
+            import jax.numpy as jnp
+            tree = jax.tree.map(
+                lambda a, v: jax.device_put(jnp.asarray(a).astype(v.dtype)),
+                tree, like)
+        return tree
+
+    def restore_latest(self, like, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like, shardings)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: distributed out-of-memory t-SVD."""
+from repro.core.tsvd import (  # noqa: F401
+    TSVDResult,
+    tsvd,
+    svd_1d,
+    power_iterate_gram,
+    power_iterate_chain,
+    reconstruct,
+    relative_error,
+)
+from repro.core.dist_svd import DistTSVDResult, dist_tsvd  # noqa: F401
+from repro.core.oom import (  # noqa: F401
+    blocked_gram,
+    tiled_gram,
+    blocked_deflated_matvec,
+    HostBlockedMatrix,
+    oom_tsvd,
+)
+from repro.core.partition import (  # noqa: F401
+    Partition,
+    make_partition,
+    BatchPlan,
+    make_batch_plan,
+    symmetric_tasks,
+)
+from repro.core.sparse import SyntheticSparseMatrix, sparse_tsvd  # noqa: F401

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``gram``            — tiled ``A^T A`` (paper Alg 3: batch/tile + symmetric tasks)
+* ``deflate_matvec``  — fused Alg-4 deflated power step sweeps
+* ``local_attn``      — causal sliding-window flash attention (serving hot spot)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd
+public wrapper (padding + CPU interpret fallback).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    gram,
+    matvec,
+    deflate_rmatvec,
+    local_attention,
+    gram_ref,
+    matvec_ref,
+    deflate_rmatvec_ref,
+    local_attention_ref,
+)

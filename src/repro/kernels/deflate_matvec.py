@@ -1,0 +1,146 @@
+"""Pallas TPU kernels for the fused Alg-4 deflated power step (paper §IV).
+
+The gram-free path evaluates ``v1 = X'^T X' v`` (X' the deflated residual,
+never materialized) as two streamed sweeps over row blocks of ``A``:
+
+* forward  — ``Xv = A @ v``                       (`matvec` kernel)
+* reverse  — ``t13  = A^T (Xv - U @ SVtv)``
+             ``utxv = U^T Xv``                    (`deflate_rmatvec` kernel)
+
+The reverse sweep fuses the paper's Alg-4 lines 3-8 with lines 14-16: the
+correction ``U @ SVtv`` is applied to the in-VMEM ``Xv`` tile right before
+the transpose-matmul, so ``A`` is read from HBM **once** per power step
+instead of twice.  On v5e this halves the dominant HBM term of the step
+(the op is memory-bound: 2mn FLOPs on mn bytes read).
+
+Both kernels are 2-D grids of MXU-aligned VMEM tiles; the reduction axis
+is innermost so partial accumulators stay resident in VMEM, and Mosaic's
+pipeline overlaps the next tile's DMA with the current tile's compute —
+the role the paper's CUDA-stream queue (q_s) plays on GPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Forward sweep: y = A @ v
+# ---------------------------------------------------------------------------
+
+def _matvec_kernel(a_ref, v_ref, y_ref):
+    """Grid (m_blocks, n_blocks); n (reduction) innermost."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[...]            # (bm, bn)
+    v = v_ref[...]            # (bn, 1)
+    y_ref[...] += jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def matvec(A: jax.Array, v: jax.Array, *, bm: int = 512, bn: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """``A @ v`` tiled; A: (m, n), v: (n,) -> (m,)."""
+    m, n = A.shape
+    if m % bm or n % bn:
+        raise ValueError(f"shape {(m, n)} not divisible by {(bm, bn)}")
+    y = pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(A, v.reshape(n, 1))
+    return y[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Reverse sweep, fused with the deflation correction
+# ---------------------------------------------------------------------------
+
+def _rmatvec_kernel(a_ref, u_ref, xv_ref, svtv_ref, t13_ref, utxv_ref):
+    """Grid (n_blocks, m_blocks); m (reduction) innermost.
+
+    Per (j, i): t13[j]  += A[i,j]^T (Xv[i] - U[i] @ SVtv)
+                utxv    += U[i]^T Xv[i]        (only once per i, at j == 0)
+    """
+    j, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        t13_ref[...] = jnp.zeros_like(t13_ref)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _():
+        utxv_ref[...] = jnp.zeros_like(utxv_ref)
+
+    u = u_ref[...]          # (bm, k)
+    xv = xv_ref[...]        # (bm, 1)
+    svtv = svtv_ref[...]    # (k, 1)
+    corr = xv - jax.lax.dot_general(
+        u, svtv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    a = a_ref[...]          # (bm, bn)
+    t13_ref[...] += jax.lax.dot_general(
+        a, corr, (((0,), (0,)), ((), ())),  # a^T @ corr
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _():
+        utxv_ref[...] += jax.lax.dot_general(
+            u, xv, (((0,), (0,)), ((), ())),  # u^T @ xv
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def deflate_rmatvec(
+    A: jax.Array,       # (m, n)
+    U: jax.Array,       # (m, k)
+    Xv: jax.Array,      # (m,)
+    SVtv: jax.Array,    # (k,)
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    interpret: bool = False,
+):
+    """Fused reverse sweep; returns ``(t13 (n,), utxv (k,))``.
+
+    The deflation correction rides in the same pass over ``A`` — A-bytes
+    from HBM are touched exactly once (beyond-paper fusion; the faithful
+    two-pass schedule exists in ``repro.core.dist_svd`` for comparison).
+    """
+    m, n = A.shape
+    k = U.shape[1]
+    if m % bm or n % bn:
+        raise ValueError(f"shape {(m, n)} not divisible by {(bm, bn)}")
+    t13, utxv = pl.pallas_call(
+        _rmatvec_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, k), lambda j, i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((k, 1), lambda j, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda j, i: (j, 0)),
+            pl.BlockSpec((k, 1), lambda j, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, U, Xv.reshape(m, 1), SVtv.reshape(k, 1))
+    return t13[:, 0], utxv[:, 0]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal sliding-window (local) flash attention.
+
+Serving/training hot spot for the local-attention architectures
+(gemma2-9b alternating local/global, recurrentgemma-9b 1:2 local:RG-LRU).
+Flash-style streaming softmax: the (bq x bk) score tile lives only in
+VMEM/VREGs; running max/denominator/accumulator are VMEM scratch.  KV tiles
+entirely outside the causal window of a query tile are skipped — with
+window ``w`` and sequence ``S`` the kernel does O(S*w) work, which is what
+makes the 500k-context cells feasible for the hybrid archs.
+
+GQA is handled by index-mapping ``h -> h // group`` for K/V (no repeat
+materialization).  Optional logit soft-capping (gemma2) fuses into the
+score tile while it is still in registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _local_attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr,
+                       *, bq: int, bk: int, window: int,
+                       softcap: float | None, scale: float):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # Tile is live iff any (q, kv) pair satisfies  q - window < kv <= q.
+    live = jnp.logical_and(k_lo <= q_lo + bq - 1,
+                           k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.logical_and(kpos <= qpos, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # Rows with an empty window (none for causal q>=0) guard by eps.
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "bq", "bk", "interpret"))
+def local_attention(
+    q: jax.Array,            # (B, H, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    *,
+    window: int,
+    softcap: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal sliding-window flash attention with GQA head mapping."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} not divisible by tiles ({bq}, {bk})")
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _local_attn_kernel, bq=bq, bk=bk, window=window,
+        softcap=softcap, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

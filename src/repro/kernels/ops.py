@@ -1,0 +1,99 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding to tile boundaries, CPU fallback (interpret mode —
+this container has no TPU; ``interpret=True`` executes the kernel body in
+Python for correctness), and sensible tile defaults per op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as _gram
+from repro.kernels import deflate_matvec as _dm
+from repro.kernels import local_attn as _la
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def gram(A: jax.Array, *, bn: int = 256, bk: int = 512,
+         symmetric: bool = True, interpret: bool | None = None) -> jax.Array:
+    """``A^T A`` via the tiled Pallas kernel (padded); fp32 out.
+
+    Zero-padding is exact for the Gram product: padded rows/cols contribute
+    zero, and the result is cropped back to (n, n).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    bn_eff = min(bn, max(128, 1 << (n - 1).bit_length()))
+    Ap = _pad_to(A, (bk, bn_eff))
+    B = _gram.gram(Ap, bn=bn_eff, bk=bk, symmetric=symmetric,
+                   interpret=interpret)
+    return B[:n, :n]
+
+
+def matvec(A: jax.Array, v: jax.Array, *, bm: int = 512, bn: int = 512,
+           interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    Ap = _pad_to(A, (bm, bn))
+    vp = _pad_to(v, (bn,))
+    return _dm.matvec(Ap, vp, bm=bm, bn=bn, interpret=interpret)[:m]
+
+
+def deflate_rmatvec(A, U, Xv, SVtv, *, bm: int = 512, bn: int = 512,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    Ap = _pad_to(A, (bm, bn))
+    Up = _pad_to(U, (bm, 1))
+    Xvp = _pad_to(Xv, (bm,))
+    t13, utxv = _dm.deflate_rmatvec(Ap, Up, Xvp, SVtv, bm=bm, bn=bn,
+                                    interpret=interpret)
+    return t13[:n], utxv
+
+
+def local_attention(q, k, v, *, window: int, softcap: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """Causal windowed flash attention; pads S to tile multiple.
+
+    Padding is appended at the sequence end: padded queries produce garbage
+    rows that are cropped; padded keys sit *after* every real query so the
+    causal mask removes them — exactness is asserted in the tests.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, S, D = q.shape
+    qp = _pad_to(q, (1, 1, bq, 1))
+    kp = _pad_to(k, (1, 1, bk, 1))
+    vp = _pad_to(v, (1, 1, bk, 1))
+    Sp = max(qp.shape[2], kp.shape[2])
+    qp = _pad_to(qp, (1, 1, Sp, 1)) if qp.shape[2] != Sp else qp
+    kp = _pad_to(kp, (1, 1, Sp, 1)) if kp.shape[2] != Sp else kp
+    vp = _pad_to(vp, (1, 1, Sp, 1)) if vp.shape[2] != Sp else vp
+    out = _la.local_attention(qp, kp, vp, window=window, softcap=softcap,
+                              bq=bq, bk=bk, interpret=interpret)
+    return out[:, :, :S]
+
+
+# Re-export oracles for convenience in tests/benchmarks.
+gram_ref = _ref.gram_ref
+matvec_ref = _ref.matvec_ref
+deflate_rmatvec_ref = _ref.deflate_rmatvec_ref
+local_attention_ref = _ref.local_attention_ref

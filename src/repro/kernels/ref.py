@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels must match
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(A: jax.Array) -> jax.Array:
+    """``B = A^T A`` in fp32."""
+    A32 = A.astype(jnp.float32)
+    return A32.T @ A32
+
+
+def matvec_ref(A: jax.Array, v: jax.Array) -> jax.Array:
+    """``y = A @ v`` in fp32."""
+    return A.astype(jnp.float32) @ v.astype(jnp.float32)
+
+
+def deflate_rmatvec_ref(
+    A: jax.Array,      # (m, n)
+    U: jax.Array,      # (m, k)
+    Xv: jax.Array,     # (m,)   already-computed A @ v
+    SVtv: jax.Array,   # (k,)   S * (V^T v)
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Alg-4 reverse sweep:
+
+    ``t13 = A^T (Xv - U @ SVtv)``  and  ``utxv = U^T Xv``.
+    """
+    A32 = A.astype(jnp.float32)
+    U32 = U.astype(jnp.float32)
+    corr = Xv.astype(jnp.float32) - U32 @ SVtv.astype(jnp.float32)
+    return A32.T @ corr, U32.T @ Xv.astype(jnp.float32)
+
+
+def local_attention_ref(
+    q: jax.Array,          # (B, H, S, D)
+    k: jax.Array,          # (B, Hkv, S, D)
+    v: jax.Array,          # (B, Hkv, S, D)
+    *,
+    window: int,           # causal sliding window (attend to <= window-1 back)
+    softcap: float | None = None,
+) -> jax.Array:
+    """Causal sliding-window attention oracle (GQA via head repeat)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = (pos_k <= pos_q) & (pos_k > pos_q - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

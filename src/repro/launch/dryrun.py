@@ -1,0 +1,429 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod (16x16=256) and multi-pod (2x16x16=512) production meshes, every
+architecture's train/prefill/decode step must lower and compile against
+ShapeDtypeStruct inputs, and we record:
+
+* ``memory_analysis()``  — per-device bytes (argument/output/temp/peak),
+  the "does it fit in 16 GB HBM" proof;
+* ``cost_analysis()``    — HLO FLOPs + bytes accessed;
+* collective bytes       — parsed from the optimized HLO (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute operand
+  sizes), feeding the §Roofline collective term.
+
+Scan-body accounting: XLA cost analysis counts a ``lax.scan`` body ONCE
+regardless of trip count (verified empirically), while layer groups,
+microbatches and loss chunks execute ``n_groups x n_micro x loss_chunks``
+times.  We therefore lower *unrolled* (scan_layers=False) 1-group and
+2-group reduced-depth variants of the same cell:
+
+    g1 = f(1 group unrolled, lc)     g2 = f(2 groups unrolled, lc)
+    h1 = f(1 group unrolled, lc=1)           [only when lc > 1]
+
+    rep = g2 - g1                      # one layer-group, fwd+bwd
+    H   = (h1 - g1) * lc / (lc - 1)    # full LM-head + loss cost
+    A   = h1 - H                       # embed + 1 group + optimizer
+    total ~= n_micro * (A + H + (n_groups - 1) * rep)
+
+(the optimizer update is over-counted n_micro times; it is element-wise
+and <1% of a step — noted in EXPERIMENTS.md).  The same composition
+applies to bytes-accessed and collective bytes.  Memory analysis comes
+from the FULL (scanned) lowering, which is exact.
+"""
+# The VERY FIRST lines, before ANY other import: the dry-run (and only
+# the dry-run) needs 512 placeholder devices.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import sharding as Sh                       # noqa: E402
+from repro.configs import (SHAPES, cell_applicable, get_config,  # noqa: E402
+                           list_archs, train_input_specs)
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.models import transformer as T              # noqa: E402
+from repro.models.config import ModelConfig            # noqa: E402
+from repro.optim import adamw as opt                   # noqa: E402
+from repro.training.train import (TrainConfig, init_train_state,  # noqa: E402
+                                  make_train_step, train_state_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing: collective bytes by op kind
+# ---------------------------------------------------------------------------
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]{1,0}' -> bytes. Tuples handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op, by kind."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+"
+            r"\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        shape_str, kind = m.groups()
+        if shape_str.startswith("("):
+            total = sum(_shape_bytes(s.strip())
+                        for s in shape_str[1:-1].split(","))
+        else:
+            total = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _sds_with_sharding(tree_sds, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree.
+
+    Empty-tuple leaves (e.g. "not compressed" markers in the compression
+    state) pass through untouched.
+    """
+    def one(s, spec):
+        if not hasattr(s, "shape"):
+            return s
+        ns = Sh.named_sharding(tuple(spec), mesh, tuple(s.shape))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+    return jax.tree.map(one, tree_sds, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _batch_sds(cfg, cell, mesh):
+    specs = train_input_specs(cfg, cell)
+    def shard(s):
+        spec = ("batch",) + (None,) * (len(s.shape) - 1)
+        ns = Sh.named_sharding(spec, mesh, tuple(s.shape))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns)
+    return jax.tree.map(shard, specs)
+
+
+def pick_microbatches(cfg: ModelConfig, cell, mesh) -> int:
+    """Bound the scan-carry activation memory to ~4 GB/chip."""
+    nchips = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            nchips *= mesh.shape[a]
+    b_loc = max(1, cell.global_batch // nchips)
+    pat_len = len(cfg.block_pattern)
+    n_groups = max(1, cfg.num_layers // pat_len)
+    carry_bytes = n_groups * b_loc * cell.seq_len * cfg.d_model * 2
+    budget = 4e9
+    n_micro = 1
+    while carry_bytes / n_micro > budget and n_micro < b_loc:
+        n_micro *= 2
+    return min(n_micro, b_loc)
+
+
+def pick_loss_chunks(cfg: ModelConfig, cell, mesh, n_micro: int) -> int:
+    """Bound the fp32 logits block to ~256 MB/chip."""
+    nchips = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            nchips *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    b_micro = max(1, cell.global_batch // nchips // n_micro)
+    v_loc = cfg.vocab_size / (tp if cfg.vocab_size % tp == 0 else 1)
+    logits_bytes = b_micro * cell.seq_len * v_loc * 4 * cfg.num_codebooks
+    lc = 1
+    while logits_bytes / lc > 256e6 and lc < cell.seq_len // 256:
+        lc *= 2
+    while cell.seq_len % lc:
+        lc //= 2
+    return max(lc, 1)
+
+
+def pick_attn_chunks(cfg: ModelConfig, cell, mesh) -> int:
+    """Bound one query-block's fp32 score tensor to ~512 MB/chip (prefill)."""
+    if "attn" not in cfg.blocks and "local" not in cfg.blocks:
+        return 1
+    nchips = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            nchips *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    b_loc = max(1, cell.global_batch // nchips)
+    H = cfg.num_heads
+    S = cell.seq_len
+    if H % tp == 0:
+        h_eff, seq_div = H // tp, 1
+    else:
+        h_eff, seq_div = H, tp      # seq-shard fallback splits the q block
+    nc = 1
+    while (b_loc * h_eff * (S / nc / seq_div) * S * 4 > 512e6
+           and nc < S // 256):
+        nc *= 2
+    while S % nc:
+        nc //= 2
+    return max(nc, 1)
+
+
+def _reduced_cfg(cfg: ModelConfig, groups: int, *,
+                 loss_chunks: int) -> ModelConfig:
+    """Unrolled (scan-free) reduced-depth variant for cost composition."""
+    return dataclasses.replace(
+        cfg, num_layers=groups * len(cfg.block_pattern),
+        scan_layers=False, loss_chunks=loss_chunks,
+        name=f"{cfg.name}-{groups}g")
+
+
+def lower_train(cfg: ModelConfig, cell, mesh, n_micro: int):
+    tc = TrainConfig(adamw=opt.AdamWConfig(moment_dtype="bfloat16"),
+                     microbatches=n_micro)
+    state_sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, tc))
+    specs = train_state_specs(cfg, tc)
+    state_sds = _sds_with_sharding(state_sds, specs, mesh)
+    batch = _batch_sds(cfg, cell, mesh)
+    step = make_train_step(cfg, tc, mesh)
+    with Sh.use_mesh(mesh):
+        lowered = jax.jit(step).lower(state_sds, batch)
+    return lowered
+
+
+def lower_prefill(cfg: ModelConfig, cell, mesh):
+    from repro.configs import prefill_input_specs
+    batch, cache = prefill_input_specs(cfg, cell)
+    batch = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=Sh.named_sharding(
+                ("batch",) + (None,) * (len(s.shape) - 1), mesh,
+                tuple(s.shape))), batch)
+    cache = _sds_with_sharding(cache, T.cache_specs(cfg), mesh)
+
+    def fn(params, batch, cache):
+        return T.prefill(params, cfg, batch, cache)
+
+    params_sds = _sds_with_sharding(
+        jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg)),
+        T.model_specs(cfg), mesh)
+    with Sh.use_mesh(mesh):
+        lowered = jax.jit(fn).lower(params_sds, batch, cache)
+    return lowered
+
+
+def lower_decode(cfg: ModelConfig, cell, mesh):
+    from repro.configs import decode_input_specs
+    toks, cache, pos = decode_input_specs(cfg, cell)
+    toks = jax.ShapeDtypeStruct(
+        toks.shape, toks.dtype,
+        sharding=Sh.named_sharding(
+            ("batch",) + (None,) * (len(toks.shape) - 1), mesh,
+            tuple(toks.shape)))
+    cache = _sds_with_sharding(cache, T.cache_specs(cfg), mesh)
+
+    def fn(params, cache, toks, pos):
+        return T.decode_step(params, cfg, cache, toks, pos)
+
+    params_sds = _sds_with_sharding(
+        jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg)),
+        T.model_specs(cfg), mesh)
+    with Sh.use_mesh(mesh):
+        lowered = jax.jit(fn).lower(params_sds, cache, toks, pos)
+    return lowered
+
+
+def analyze(lowered, *, compile_too: bool = True) -> dict:
+    rec: dict = {}
+    t0 = time.time()
+    if compile_too:
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes",
+                      "peak_memory_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        except Exception as e:  # noqa: BLE001
+            rec["memory_analysis_error"] = str(e)
+        try:
+            ca = compiled.cost_analysis()
+            rec["flops"] = float(ca.get("flops", 0.0))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:  # noqa: BLE001
+            rec["cost_analysis_error"] = str(e)
+        try:
+            text = compiled.as_text()
+        except Exception:
+            text = lowered.as_text()
+    else:
+        text = lowered.as_text()
+    rec["collective_bytes"] = parse_collective_bytes(text)
+    rec["collective_bytes_total"] = float(
+        sum(rec["collective_bytes"].values()))
+    return rec
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             compose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "kind": cell.kind}
+    if not ok:
+        rec["skipped"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    pat_len = len(cfg.block_pattern)
+    n_groups = cfg.num_layers // pat_len
+    rec["n_groups"] = n_groups
+    rec["tail_layers"] = cfg.num_layers - n_groups * pat_len
+
+    t0 = time.time()
+    if cell.kind == "train":
+        n_micro = pick_microbatches(cfg, cell, mesh)
+        lc = pick_loss_chunks(cfg, cell, mesh, n_micro)
+        # remat=full for the big configs: recompute beats 16 GB HBM
+        # (remat policy is a §Perf lever; see EXPERIMENTS.md)
+        cfg = dataclasses.replace(cfg, loss_chunks=lc, remat_policy="full")
+        rec["n_micro"] = n_micro
+        rec["loss_chunks"] = lc
+        lowered = lower_train(cfg, cell, mesh, n_micro)
+    elif cell.kind == "prefill":
+        n_micro, lc = 1, 1
+        nc = pick_attn_chunks(cfg, cell, mesh)
+        cfg = dataclasses.replace(cfg, attn_q_chunks=nc)
+        rec["attn_q_chunks"] = nc
+        lowered = lower_prefill(cfg, cell, mesh)
+    else:
+        n_micro, lc = 1, 1
+        lowered = lower_decode(cfg, cell, mesh)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    rec["full"] = analyze(lowered)
+
+    # Composition variants run ONE microbatch worth of data (the composed
+    # totals multiply by n_micro, so f1/f2 must be per-micro quantities).
+    cell_v = dataclasses.replace(
+        cell, global_batch=max(cell.global_batch // n_micro,
+                               16 if mesh_kind == "single" else 32)) \
+        if cell.kind == "train" else cell
+
+    def _lower_variant(cfg_v):
+        if cell.kind == "train":
+            return lower_train(cfg_v, cell_v, mesh, 1)
+        if cell.kind == "prefill":
+            return lower_prefill(cfg_v, cell_v, mesh)
+        return lower_decode(cfg_v, cell_v, mesh)
+
+    if compose and n_groups > 1:
+        # unrolled reduced-depth variants isolate one layer-group's cost
+        rec["g1"] = analyze(_lower_variant(
+            _reduced_cfg(cfg, 1, loss_chunks=lc)))
+        rec["g2"] = analyze(_lower_variant(
+            _reduced_cfg(cfg, 2, loss_chunks=lc)))
+        if lc > 1:
+            rec["h1"] = analyze(_lower_variant(
+                _reduced_cfg(cfg, 1, loss_chunks=1)))
+
+        comp = {}
+        for key in ("flops", "bytes_accessed", "collective_bytes_total"):
+            g1 = rec["g1"].get(key)
+            g2 = rec["g2"].get(key)
+            if g1 is None or g2 is None:
+                continue
+            rep = max(g2 - g1, 0.0)
+            if lc > 1 and key in rec.get("h1", {}):
+                h1 = rec["h1"][key]
+                H = max(h1 - g1, 0.0) * lc / (lc - 1)
+                A = h1 - H
+            else:
+                H, A = 0.0, g1
+            total = n_micro * (A + H + (n_groups - 1) * rep)
+            comp[key] = total
+            comp[key + "_per_group"] = rep
+            comp[key + "_head"] = H
+        rec["composed"] = comp
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compose", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape, args.mesh))
+    else:
+        cells.append((args.arch, args.shape, args.mesh))
+
+    for arch, shape, mesh_kind in cells:
+        tag = f"{arch}_{shape}_{mesh_kind}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, mesh_kind,
+                           compose=not args.no_compose)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {tag}: {e}", flush=True)
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if "error" not in rec and "skipped" not in rec:
+            fl = rec.get("composed", {}).get(
+                "flops", rec["full"].get("flops", 0))
+            print(f"[ ok ] {tag}: flops~{fl:.3e} "
+                  f"wall={rec['wall_s']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> compare.
+
+Each experiment re-lowers a dry-run cell with one concrete change (sharding
+rule override, microbatch count, remat policy, MoE capacity, gradient
+compression) and records the three roofline inputs so EXPERIMENTS.md §Perf
+can show before/after per hypothesis.
+
+    PYTHONPATH=src python -m repro.launch.perf --exp llava_actshard
+    PYTHONPATH=src python -m repro.launch.perf --all
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import sharding as Sh                        # noqa: E402
+from repro.configs import SHAPES, get_config            # noqa: E402
+from repro.launch import dryrun as DR                   # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(DR.RESULTS_DIR.rstrip("/")), "perf")
+
+
+def lower_cell(arch, shape, mesh_kind, *, overrides=None, n_micro=None,
+               loss_chunks=None, cfg_changes=None, compression=False,
+               compose=True):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if cfg_changes:
+        cfg = dataclasses.replace(cfg, **cfg_changes)
+
+    ctx = Sh.rules(overrides) if overrides else _null()
+    with ctx:
+        if cell.kind == "train":
+            nm = n_micro if n_micro is not None else DR.pick_microbatches(
+                cfg, cell, mesh)
+            lc = loss_chunks if loss_chunks is not None else \
+                DR.pick_loss_chunks(cfg, cell, mesh, nm)
+            cfg = dataclasses.replace(cfg, loss_chunks=lc,
+                                      remat_policy=cfg.remat_policy
+                                      if cfg_changes and "remat_policy"
+                                      in cfg_changes else "full")
+            if compression:
+                lowered = _lower_train_compressed(cfg, cell, mesh, nm)
+            else:
+                lowered = DR.lower_train(cfg, cell, mesh, nm)
+            rec = {"n_micro": nm, "loss_chunks": lc}
+            rec["full"] = DR.analyze(lowered)
+            if compose:
+                floor = 32 if mesh_kind == "multi" else 16
+                cell_v = dataclasses.replace(
+                    cell, global_batch=max(cell.global_batch // nm, floor))
+                g1 = DR.analyze(DR.lower_train(
+                    DR._reduced_cfg(cfg, 1, loss_chunks=lc), cell_v, mesh, 1))
+                g2 = DR.analyze(DR.lower_train(
+                    DR._reduced_cfg(cfg, 2, loss_chunks=lc), cell_v, mesh, 1))
+                rec["g1"], rec["g2"] = g1, g2
+                n_groups = cfg.num_layers // len(cfg.block_pattern)
+                comp = {}
+                for key in ("flops", "bytes_accessed",
+                            "collective_bytes_total"):
+                    rep = max(g2.get(key, 0) - g1.get(key, 0), 0.0)
+                    comp[key] = nm * (g1.get(key, 0) + (n_groups - 1) * rep)
+                    comp[key + "_per_group"] = rep
+                rec["composed"] = comp
+            return rec
+        if cell.kind == "prefill":
+            nc = DR.pick_attn_chunks(cfg, cell, mesh)
+            cfg = dataclasses.replace(cfg, attn_q_chunks=nc)
+            return {"full": DR.analyze(DR.lower_prefill(cfg, cell, mesh))}
+        return {"full": DR.analyze(DR.lower_decode(cfg, cell, mesh))}
+
+
+def _lower_train_compressed(cfg, cell, mesh, n_micro):
+    from repro.optim import adamw as opt
+    from repro.optim.compression import CompressionConfig
+    from repro.training.train import (TrainConfig, init_train_state,
+                                      make_train_step, train_state_specs)
+    tc = TrainConfig(adamw=opt.AdamWConfig(moment_dtype="bfloat16"),
+                     compression=CompressionConfig(enabled=True, rank=8,
+                                                   min_size=65536),
+                     microbatches=n_micro)
+    state_sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, tc, mesh=mesh))
+    specs = train_state_specs(cfg, tc)
+    state_sds = DR._sds_with_sharding(state_sds, specs, mesh)
+    batch = DR._batch_sds(cfg, cell, mesh)
+    step = make_train_step(cfg, tc, mesh)
+    with Sh.use_mesh(mesh):
+        return jax.jit(step).lower(state_sds, batch)
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+EXPERIMENTS = {
+    # H-LLAVA: collective-dominated by per-microbatch FSDP all-gathers.
+    # Hypothesis: sharding ACTIVATIONS over `model` (Megatron-SP style)
+    # cuts the scan-carry memory 16x -> n_micro 16 -> 1 -> params gathered
+    # once per step instead of 16x: collective bytes ~ /16.
+    "llava_base": dict(arch="llava-next-34b", shape="train_4k",
+                       mesh_kind="single"),
+    "llava_actshard": dict(arch="llava-next-34b", shape="train_4k",
+                           mesh_kind="single",
+                           overrides={"embed": "model"}, n_micro=1),
+    # H-GROK: memory+collective dominated (expert FSDP gathers x16 micro).
+    "grok_base": dict(arch="grok-1-314b", shape="train_4k",
+                      mesh_kind="single"),
+    "grok_actshard": dict(arch="grok-1-314b", shape="train_4k",
+                          mesh_kind="single",
+                          overrides={"embed": "model"}, n_micro=1),
+    "grok_actshard_cap1": dict(arch="grok-1-314b", shape="train_4k",
+                               mesh_kind="single",
+                               overrides={"embed": "model"}, n_micro=1,
+                               cfg_changes={"capacity_factor": 1.0}),
+    # Iteration 2: n_micro=1 won the collectives but ballooned per-layer
+    # transients (llava temp 6.5 -> 30 GB; grok 20 -> 44 GB). Hypothesis:
+    # nm=2/4 keeps most of the gather win while halving/quartering the
+    # transient activations.
+    "llava_actshard_nm2": dict(arch="llava-next-34b", shape="train_4k",
+                               mesh_kind="single",
+                               overrides={"embed": "model"}, n_micro=2),
+    "grok_actshard_cap1_nm4": dict(arch="grok-1-314b", shape="train_4k",
+                                   mesh_kind="single",
+                                   overrides={"embed": "model"}, n_micro=4,
+                                   cfg_changes={"capacity_factor": 1.0}),
+    # Iteration 3: with activations sharded and nm balanced, memory is the
+    # dominant term and includes remat=full recompute reads. Hypothesis:
+    # remat=minimal (save dot outputs) trades temp memory for fewer
+    # recompute bytes; activation sharding should keep the saved dots
+    # affordable now.
+    "llava_actshard_nm4": dict(arch="llava-next-34b", shape="train_4k",
+                               mesh_kind="single",
+                               overrides={"embed": "model"}, n_micro=4),
+    "llava_actshard_nm2_rematmin": dict(
+        arch="llava-next-34b", shape="train_4k", mesh_kind="single",
+        overrides={"embed": "model"}, n_micro=2,
+        cfg_changes={"remat_policy": "minimal"}),
+    "grok_actshard_cap1_nm4_rematmin": dict(
+        arch="grok-1-314b", shape="train_4k", mesh_kind="single",
+        overrides={"embed": "model"}, n_micro=4,
+        cfg_changes={"capacity_factor": 1.0, "remat_policy": "minimal"}),
+    # H-COMPRESS: the paper's technique across the pod axis. Cross-pod
+    # gradient all-reduce (2 x params bf16) -> rank-8 factors.
+    "yi_multi_base": dict(arch="yi-6b", shape="train_4k",
+                          mesh_kind="multi", compose=False),
+    "yi_multi_compressed": dict(arch="yi-6b", shape="train_4k",
+                                mesh_kind="multi", compression=True,
+                                compose=False),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if args.all else [args.exp]
+    os.makedirs(RESULTS, exist_ok=True)
+    for name in names:
+        path = os.path.join(RESULTS, name + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {name}")
+            continue
+        print(f"[run ] {name}", flush=True)
+        t0 = time.time()
+        try:
+            rec = lower_cell(**EXPERIMENTS[name])
+            rec["wall_s"] = round(time.time() - t0, 1)
+        except Exception as e:  # noqa: BLE001
+            rec = {"error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {name}: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        src = rec.get("composed") or rec.get("full", {})
+        print(f"[ ok ] {name}: flops={src.get('flops', 0):.3e} "
+              f"coll={src.get('collective_bytes_total', 0)/1e9:.2f}GB "
+              f"wall={rec.get('wall_s')}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

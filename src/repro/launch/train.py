@@ -1,0 +1,85 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 100 --batch 8 --seq 128
+
+``--smoke`` runs the reduced same-family config on local devices (CPU-
+friendly).  Without it, the full published config is used — sized for the
+production mesh; on real hardware the mesh is built from the actual
+device fleet (``make_production_mesh`` when 256/512 devices are present,
+else a host mesh over whatever exists).
+
+The runner checkpoints atomically, resumes after failures, and the data
+pipeline is (seed, step)-pure, so re-launching this command continues the
+run (fault-tolerance path; see repro.training.runner).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.data import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import CompressionConfig
+from repro.training import TrainConfig
+from repro.training.runner import RunnerConfig, TrainingRunner
+
+
+def main():
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="SVD gradient compression across the pod axis")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        cfg = dataclasses.replace(cfg, name=cfg.name.replace("-smoke", "")
+                                  + "-smoke")
+    n_dev = jax.device_count()
+    mesh = None
+    if n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=(n_dev >= 512))
+    elif n_dev > 1:
+        mesh = make_host_mesh()
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={n_dev} mesh={None if mesh is None else dict(mesh.shape)}")
+
+    tc = TrainConfig(
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps),
+        compression=CompressionConfig(enabled=args.compress),
+        microbatches=args.microbatches)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch, family=cfg.family,
+                    num_codebooks=cfg.num_codebooks,
+                    patch_positions=cfg.patch_positions,
+                    d_model=cfg.d_model)
+    rc = RunnerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    runner = TrainingRunner(cfg, tc, rc, dc, mesh=mesh)
+    runner.run()
+    losses = [h["loss"] for h in runner.history]
+    if losses:
+        print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

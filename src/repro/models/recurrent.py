@@ -1,0 +1,264 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (Griffin) and RWKV-6 (Finch).
+
+TPU adaptation notes (recorded per DESIGN.md §2):
+
+* RG-LRU has a *diagonal* state, so the recurrence ``h_t = a_t h_{t-1} +
+  b_t`` is an elementwise linear scan — implemented with
+  ``jax.lax.associative_scan`` (log-depth, parallel over the sequence;
+  the TPU-native equivalent of the CUDA linear-recurrence kernels).
+* RWKV-6 carries a *matrix-valued* state (dk x dv per head) with
+  data-dependent per-channel decay; an associative scan would materialize
+  (B, H, T, dk, dv), so we use ``jax.lax.scan`` over time — exact, O(T)
+  sequential, state-resident.  A chunked Pallas kernel is the known
+  speedup path (GLA-style) and is left as future work; the scan is the
+  oracle any such kernel must match.
+
+Both blocks expose O(1)-per-token decode state, which is what makes the
+long_500k cells feasible for the hybrid/ssm architectures.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg: ModelConfig):
+    D, R = cfg.d_model, cfg.resolved_rnn_width
+    W = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    si = 1.0 / math.sqrt(D)
+    sr = 1.0 / math.sqrt(R)
+    return {
+        "w_x": (jax.random.normal(ks[0], (D, R)) * si).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (D, R)) * si).astype(dt),
+        "conv": (jax.random.normal(ks[2], (W, R)) * 0.1).astype(dt),
+        "w_a": (jax.random.normal(ks[3], (R, R)) * sr).astype(dt),
+        "w_i": (jax.random.normal(ks[4], (R, R)) * sr).astype(dt),
+        # Lambda parameterized so a = exp(-8 softplus(L) r) starts near 0.95
+        "lam": jnp.full((R,), 0.65, jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (R, D)) * sr).astype(dt),
+    }
+
+
+def rglru_block_specs(cfg: ModelConfig):
+    return {
+        "w_x": ("embed_p", "rnn"),
+        "w_gate": ("embed_p", "rnn"),
+        "conv": (None, "rnn"),
+        "w_a": ("rnn", None),
+        "w_i": ("rnn", None),
+        "lam": ("rnn",),
+        "w_out": ("rnn", "embed_p"),
+    }
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 via associative scan.
+
+    a, b: (B, T, R); h0: (B, R) initial state or None.
+    """
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru_block(p, cfg: ModelConfig, x: jax.Array,
+                      state: dict | None = None):
+    """Griffin recurrent block. x: (B, T, D).
+
+    Returns (y, new_state); state = {"h": (B,R), "conv": (B,W-1,R)} for
+    O(1) decode.
+    """
+    B, T, D = x.shape
+    R = cfg.resolved_rnn_width
+    W = cfg.conv_width
+
+    u = jnp.einsum("btd,dr->btr", x, p["w_x"])
+    gate = jnp.einsum("btd,dr->btr", x, p["w_gate"])
+    u = sharding.constrain(u, "batch", None, "rnn")
+
+    # causal depthwise conv over time (width W)
+    prev = (state["conv"] if state is not None
+            else jnp.zeros((B, W - 1, R), u.dtype))
+    u_pad = jnp.concatenate([prev, u], axis=1)           # (B, T+W-1, R)
+    conv = sum(u_pad[:, i:i + T] * p["conv"][i] for i in range(W))
+    new_conv = u_pad[:, T:]                              # last W-1 inputs
+
+    r = jax.nn.sigmoid(jnp.einsum(
+        "btr,rs->bts", conv, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "btr,rs->bts", conv, p["w_i"]).astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r         # (B,T,R) fp32
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably in log space
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * conv.astype(jnp.float32))
+
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+    h = _rglru_scan(a, b, h0)                            # (B,T,R) fp32
+    new_h = h[:, -1]
+
+    y = jax.nn.gelu(gate.astype(jnp.float32)) * h
+    y = jnp.einsum("btr,rd->btd", y.astype(x.dtype), p["w_out"])
+    y = sharding.constrain(y, "batch", None, "embed")
+    return y, {"h": new_h.astype(jnp.float32), "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    R, W = cfg.resolved_rnn_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, R), jnp.dtype(cfg.dtype))}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    F = cfg.d_ff
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / math.sqrt(D)
+    return {
+        # time mix
+        "w_r": (jax.random.normal(ks[0], (D, D)) * s).astype(dt),
+        "w_k": (jax.random.normal(ks[1], (D, D)) * s).astype(dt),
+        "w_v": (jax.random.normal(ks[2], (D, D)) * s).astype(dt),
+        "w_g": (jax.random.normal(ks[3], (D, D)) * s).astype(dt),
+        "w_o": (jax.random.normal(ks[4], (D, D)) * s).astype(dt),
+        "mu": jnp.full((5, D), 0.5, jnp.float32),  # token-shift mixes r,k,v,g,w
+        "w0": jnp.full((H, hd), -2.0, jnp.float32),       # decay base
+        "w_lora_a": (jax.random.normal(ks[5], (D, 64)) * s).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[6], (64, D)) * 0.1).astype(dt),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),
+        # channel mix
+        "c_mu": jnp.full((2, D), 0.5, jnp.float32),
+        "c_k": (jax.random.normal(ks[8], (D, F)) * s).astype(dt),
+        "c_v": (jax.random.normal(ks[9], (F, D)) * (1.0 / math.sqrt(F))).astype(dt),
+        "c_r": (jax.random.normal(ks[8], (D, D)) * s).astype(dt),
+    }
+
+
+def rwkv_block_specs(cfg: ModelConfig):
+    return {
+        "w_r": ("embed_p", "rnn"), "w_k": ("embed_p", "rnn"),
+        "w_v": ("embed_p", "rnn"), "w_g": ("embed_p", "rnn"),
+        "w_o": ("rnn", "embed_p"),
+        "mu": (None, "embed_p"),
+        "w0": (None, None),
+        "w_lora_a": ("embed_p", None), "w_lora_b": (None, "embed_p"),
+        "u": (None, None),
+        "c_mu": (None, "embed_p"),
+        "c_k": ("embed_p", "mlp"), "c_v": ("mlp", "embed_p"),
+        "c_r": ("embed_p", "rnn"),
+    }
+
+
+def _wkv_scan(r, k, v, w, u, S0):
+    """RWKV-6 core. r,k,v: (B,T,H,hd); w: (B,T,H,hd) decays in (0,1);
+    u: (H,hd) bonus; S0: (B,H,hd,hd). Returns (out (B,T,H,hd), S_T).
+
+    Per step:  o_t = r_t @ (S + (u*k_t) v_t^T);  S <- w_t*S + k_t v_t^T.
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        S_eff = S + u[None, :, :, None] * kv
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S_eff)
+        S = w_t[..., None] * S + kv
+        return S, o_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_T, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S_T
+
+
+def apply_rwkv_time_mix(p, cfg: ModelConfig, x: jax.Array,
+                        state: dict | None = None):
+    """RWKV-6 time mix. x: (B,T,D); state {"x_prev": (B,D), "S": (B,H,hd,hd)}."""
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    x_prev = (state["x_prev_t"] if state is not None
+              else jnp.zeros((B, D), x.dtype))
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+    def mix(i):
+        m = p["mu"][i].astype(x.dtype)
+        return x + (x_shift - x) * m
+
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = jnp.einsum("btd,de->bte", xr, p["w_r"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["w_k"]).reshape(B, T, H, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["w_v"]).reshape(B, T, H, hd)
+    g = jnp.einsum("btd,de->bte", xg, p["w_g"])
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    dw = jnp.einsum("btd,dl,le->bte", xw, p["w_lora_a"], p["w_lora_b"])
+    logw = p["w0"][None, None] + dw.reshape(B, T, H, hd).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))
+
+    S0 = (state["S"] if state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    out, S_T = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), w, p["u"], S0)
+
+    out = out.reshape(B, T, D) * jax.nn.silu(g.astype(jnp.float32))
+    y = jnp.einsum("btd,de->bte", out.astype(x.dtype), p["w_o"])
+    y = sharding.constrain(y, "batch", None, "embed")
+    new_state = {"x_prev_t": x[:, -1], "S": S_T}
+    return y, new_state
+
+
+def apply_rwkv_channel_mix(p, cfg: ModelConfig, x: jax.Array,
+                           state: dict | None = None):
+    """RWKV channel mix (token-shifted squared-relu FFN)."""
+    B, T, D = x.shape
+    x_prev = (state["x_prev_c"] if state is not None
+              else jnp.zeros((B, D), x.dtype))
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mk = p["c_mu"][0].astype(x.dtype)
+    mr = p["c_mu"][1].astype(x.dtype)
+    xk = x + (x_shift - x) * mk
+    xr = x + (x_shift - x) * mr
+    kk = jnp.einsum("btd,df->btf", xk, p["c_k"])
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = sharding.constrain(kk, "batch", None, "mlp")
+    vv = jnp.einsum("btf,fd->btd", kk, p["c_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["c_r"]))
+    y = rr * vv
+    y = sharding.constrain(y, "batch", None, "embed")
+    return y, {"x_prev_c": x[:, -1]}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    return {
+        "x_prev_t": jnp.zeros((batch, D), jnp.dtype(cfg.dtype)),
+        "x_prev_c": jnp.zeros((batch, D), jnp.dtype(cfg.dtype)),
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

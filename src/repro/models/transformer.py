@@ -1,0 +1,536 @@
+"""Decoder-only LM assembly: init, train forward, prefill, decode.
+
+Supports every assigned architecture family through the per-layer block
+pattern (attn | local | rglru | rwkv) and the FFN choice (GLU MLP, MoE,
+RWKV channel-mix), plus the VLM / audio frontend stubs:
+
+* ``vlm``   — precomputed patch embeddings are concatenated ahead of the
+  token embeddings (``input_specs`` supplies them; the vision tower is a
+  stub per the assignment).
+* ``audio`` — K parallel EnCodec codebook streams; embeddings summed,
+  K untied output heads.
+
+Layers are scanned in *groups* (one repetition of the block pattern) so
+compile time and HLO size stay bounded at 64 layers; a ragged tail (e.g.
+recurrentgemma's 38 = 12x3 + 2) is unrolled after the scan.
+
+Caches: attention layers use a ring-buffer KV cache sized
+``min(window, max_seq)`` (full ``max_seq`` for global attention);
+recurrent layers carry O(1) state — this is what makes the long_500k
+decode cells feasible for the sub-quadratic archs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import recurrent as R
+from repro.models.config import ModelConfig
+
+Params = dict
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_rmsnorm(cfg.d_model),
+         "norm2": L.init_rmsnorm(cfg.d_model)}
+    if cfg.post_block_norm:
+        p["norm1_post"] = L.init_rmsnorm(cfg.d_model)
+        p["norm2_post"] = L.init_rmsnorm(cfg.d_model)
+    if kind in ("attn", "local"):
+        p["mix"] = L.init_attention(k1, cfg)
+    elif kind == "rglru":
+        p["mix"] = R.init_rglru_block(k1, cfg)
+    elif kind == "rwkv":
+        p["mix"] = None  # rwkv packs time+channel mix into one param dict
+    else:
+        raise ValueError(kind)
+
+    if kind == "rwkv":
+        p["ffn"] = R.init_rwkv_block(k2, cfg)
+        p.pop("mix")
+    elif cfg.is_moe:
+        p["ffn"] = M.init_moe(k2, cfg)
+    else:
+        p["ffn"] = M.init_mlp(k2, cfg)
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, kind: str):
+    s = {"norm1": L.rmsnorm_specs(), "norm2": L.rmsnorm_specs()}
+    if cfg.post_block_norm:
+        s["norm1_post"] = L.rmsnorm_specs()
+        s["norm2_post"] = L.rmsnorm_specs()
+    if kind in ("attn", "local"):
+        s["mix"] = L.attention_specs(cfg)
+    elif kind == "rglru":
+        s["mix"] = R.rglru_block_specs(cfg)
+    if kind == "rwkv":
+        s["ffn"] = R.rwkv_block_specs(cfg)
+    elif cfg.is_moe:
+        s["ffn"] = M.moe_specs(cfg)
+    else:
+        s["ffn"] = M.mlp_specs(cfg)
+    return s
+
+
+def group_layout(cfg: ModelConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    """(pattern, n_groups, tail_kinds)."""
+    pat = cfg.block_pattern
+    if not cfg.scan_layers:
+        return pat, 0, cfg.blocks
+    n_groups = cfg.num_layers // len(pat)
+    tail = cfg.blocks[n_groups * len(pat):]
+    return pat, n_groups, tail
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    pat, n_groups, tail = group_layout(cfg)
+    keys = jax.random.split(key, 4)
+    V, D, K = cfg.vocab_size, cfg.d_model, cfg.num_codebooks
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "audio":
+        embed = (jax.random.normal(keys[0], (K, V, D)) / math.sqrt(D)).astype(dt)
+    else:
+        embed = (jax.random.normal(keys[0], (V, D)) / math.sqrt(D)).astype(dt)
+    params: Params = {"embed": embed,
+                      "final_norm": L.init_rmsnorm(D)}
+    if not cfg.tie_embeddings:
+        shape = (K, D, V) if cfg.family == "audio" else (D, V)
+        params["head"] = (
+            jax.random.normal(keys[1], shape) / math.sqrt(D)).astype(dt)
+
+    if n_groups > 0:
+        gkeys = jax.random.split(keys[2], n_groups)
+
+        def one_group(k):
+            ks = jax.random.split(k, len(pat))
+            return {f"b{i}": _init_layer(ks[i], cfg, kind)
+                    for i, kind in enumerate(pat)}
+
+        params["groups"] = jax.vmap(one_group)(gkeys)
+    if tail:
+        tkeys = jax.random.split(keys[3], len(tail))
+        params["tail"] = [
+            _init_layer(tkeys[i], cfg, kind) for i, kind in enumerate(tail)]
+    return params
+
+
+def model_specs(cfg: ModelConfig) -> PyTree:
+    pat, n_groups, tail = group_layout(cfg)
+    specs: PyTree = {
+        "embed": (("codebook", "vocab", "embed_p") if cfg.family == "audio"
+                  else ("vocab", "embed_p")),
+        "final_norm": L.rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = (("codebook", "embed_p", "vocab")
+                         if cfg.family == "audio" else ("embed_p", "vocab"))
+    if n_groups > 0:
+        def add_layers(spec):
+            return ("layers",) + tuple(spec)
+        g = {f"b{i}": _layer_specs(cfg, kind) for i, kind in enumerate(pat)}
+        specs["groups"] = jax.tree.map(
+            add_layers, g, is_leaf=lambda x: isinstance(x, tuple))
+    if tail:
+        specs["tail"] = [
+            _layer_specs(cfg, kind) for kind in tail]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp, cfg: ModelConfig, kind: str, x, positions,
+                 cache=None, decode=False):
+    """Pre-norm block; returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    h = L.apply_rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        local = kind == "local"
+        if decode:
+            new_cache = dict(cache)
+            k_new, v_new = L.project_kv(lp["mix"], cfg, h, positions)
+            Lc = cache["k"].shape[1]
+            idx = positions[0, 0] % Lc
+            new_cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k_new, (0, idx, 0, 0))
+            new_cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v_new, (0, idx, 0, 0))
+            new_cache["pos"] = jax.lax.dynamic_update_slice(
+                cache["pos"], positions[0, 0:1].astype(jnp.int32), (idx,))
+            kv_pos = jnp.broadcast_to(new_cache["pos"][None],
+                                      (x.shape[0], Lc))
+            kv_mask = kv_pos >= 0
+            # Barrier: stops XLA hoisting a per-layer bf16->f32 convert of
+            # the cache out of the layer scan (which would materialize the
+            # whole 64-layer cache stack in fp32 — a CPU-backend dot
+            # legalization artifact; TPU dots consume bf16 natively).
+            k_use, v_use = jax.lax.optimization_barrier(
+                (new_cache["k"], new_cache["v"]))
+            mix = L.apply_attention(
+                lp["mix"], cfg, h, positions, local=local,
+                kv=(k_use, v_use),
+                kv_positions=kv_pos, kv_mask=kv_mask)
+        else:
+            mix = L.apply_attention(lp["mix"], cfg, h, positions, local=local)
+            if cache is not None:  # prefill: fill the ring buffer
+                k_full, v_full = L.project_kv(lp["mix"], cfg, h, positions)
+                new_cache = _fill_cache(cache, k_full, v_full, positions)
+    elif kind == "rglru":
+        mix, st = R.apply_rglru_block(lp["mix"], cfg, h,
+                                      cache if (decode or cache is not None)
+                                      else None)
+        new_cache = st if cache is not None else None
+    elif kind == "rwkv":
+        mix, st = R.apply_rwkv_time_mix(lp["ffn"], cfg, h,
+                                        cache if (decode or cache is not None)
+                                        else None)
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache.update(st)
+    else:
+        raise ValueError(kind)
+
+    if cfg.post_block_norm:
+        mix = L.apply_rmsnorm(lp["norm1_post"], mix, cfg.norm_eps)
+    x = x + mix
+
+    h = L.apply_rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        ffn, st = R.apply_rwkv_channel_mix(
+            lp["ffn"], cfg, h,
+            cache if (decode or cache is not None) else None)
+        if cache is not None:
+            new_cache = dict(new_cache)
+            new_cache.update(st)
+    elif cfg.is_moe:
+        ffn, aux = M.apply_moe(lp["ffn"], cfg, h)
+    else:
+        ffn = M.apply_mlp(lp["ffn"], cfg, h)
+    if cfg.post_block_norm:
+        ffn = L.apply_rmsnorm(lp["norm2_post"], ffn, cfg.norm_eps)
+    x = x + ffn
+    return x, aux, new_cache
+
+
+def _fill_cache(cache, k_full, v_full, positions):
+    """Write the last min(S, L_cache) positions of k/v into the ring."""
+    B, S = positions.shape
+    Lc = cache["k"].shape[1]
+    take = min(S, Lc)
+    pos_tail = positions[0, S - take:]            # (take,)
+    slots = pos_tail % Lc
+    new = dict(cache)
+    new["k"] = cache["k"].at[:, slots].set(k_full[:, S - take:])
+    new["v"] = cache["v"].at[:, slots].set(v_full[:, S - take:])
+    new["pos"] = cache["pos"].at[slots].set(pos_tail.astype(jnp.int32))
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.family == "audio":
+        tok = batch["tokens"]  # (B, K, S)
+        # gather per codebook then sum (MusicGen sums the K streams)
+        outs = [jnp.take(params["embed"][c], tok[:, c], axis=0)
+                for c in range(cfg.num_codebooks)]
+        x = sum(outs)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    return sharding.constrain(x, "batch", None, "embed")
+
+
+def _lm_head(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> logits fp32 (B, S, V) (or (B, S, K, V) audio)."""
+    if cfg.family == "audio":
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,kvd->bskv", x, params["embed"])
+        else:
+            logits = jnp.einsum("bsd,kdv->bskv", x, params["head"])
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return sharding.constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params, cfg: ModelConfig, batch):
+    """Full-sequence forward up to the final norm. Returns (x, aux)."""
+    pat, n_groups, tail = group_layout(cfg)
+    x = _embed_tokens(params, cfg, batch)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        for i, kind in enumerate(pat):
+            x, a, _ = _apply_layer(gp[f"b{i}"], cfg, kind, x, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat_policy == "full":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat_policy == "minimal":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_groups > 0:
+        (x, aux), _ = jax.lax.scan(group_fn, (x, aux0), params["groups"])
+    else:
+        aux = aux0
+        for lp, kind in zip(params.get("tail", []), cfg.blocks):
+            x, a, _ = _apply_layer(lp, cfg, kind, x, positions)
+            aux = aux + a
+    if n_groups > 0:
+        for lp, kind in zip(params.get("tail", []), tail):
+            x, a, _ = _apply_layer(lp, cfg, kind, x, positions)
+            aux = aux + a
+
+    x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    return _lm_head(params, cfg, x), aux
+
+
+def _xent(lg, lb):
+    """Sharded-vocab-safe cross entropy: logsumexp + iota select.
+
+    ``take_along_axis`` over a TP-sharded vocab axis would all-gather the
+    fp32 logits (40 GB/chip at 152k vocab); the iota-compare-reduce form
+    keeps every shard local and fuses.
+    """
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    sel = jnp.sum(jnp.where(iota == lb[..., None], lg, 0.0), axis=-1)
+    return lse - sel
+
+
+def _nll_block(params, cfg: ModelConfig, x, labels):
+    """Head + xent for one sequence block. x: (B, s, D)."""
+    logits = _lm_head(params, cfg, x)
+    if cfg.family == "audio":
+        labels_sk = jnp.moveaxis(labels, 1, 2)   # (B, s, K)
+        nll = jnp.mean(_xent(logits, labels_sk), axis=-1)
+    else:
+        nll = _xent(logits, labels)
+    return nll                                    # (B, s)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jax.Array, dict]:
+    """Next-token cross entropy (+ MoE aux). Handles vlm prefix masking.
+
+    ``cfg.loss_chunks > 1`` scans the LM head + xent over sequence chunks
+    (with remat) so the fp32 logits buffer is bounded — at 256k vocab the
+    unchunked buffer is multiple GB/chip and dominates peak memory.
+    """
+    x, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        x = x[:, -labels.shape[1]:]              # drop patch positions
+    mask = batch.get("loss_mask")
+    S = labels.shape[-1]
+    lc = cfg.loss_chunks
+
+    if lc <= 1 or S % lc:
+        nll = _nll_block(params, cfg, x, labels)
+        loss = (jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+                if mask is not None else jnp.mean(nll))
+    else:
+        c = S // lc
+        B = x.shape[0]
+        xc = jnp.moveaxis(x.reshape(B, lc, c, -1), 1, 0)        # (lc,B,c,D)
+        if cfg.family == "audio":
+            lbc = jnp.moveaxis(
+                labels.reshape(B, cfg.num_codebooks, lc, c), 2, 0)
+        else:
+            lbc = jnp.moveaxis(labels.reshape(B, lc, c), 1, 0)  # (lc,B,c)
+        mc = (jnp.moveaxis(mask.reshape(B, lc, c), 1, 0)
+              if mask is not None else None)
+
+        @jax.checkpoint
+        def block(carry, inp):
+            tot, cnt = carry
+            if mc is None:
+                xb, lb = inp
+                nll = _nll_block(params, cfg, xb, lb)
+                return (tot + jnp.sum(nll),
+                        cnt + jnp.float32(nll.size)), None
+            xb, lb, mb = inp
+            nll = _nll_block(params, cfg, xb, lb)
+            return (tot + jnp.sum(nll * mb), cnt + jnp.sum(mb)), None
+
+        xs = (xc, lbc) if mc is None else (xc, lbc, mc)
+        (tot, cnt), _ = jax.lax.scan(
+            block, (jnp.float32(0), jnp.float32(0)), xs)
+        loss = tot / jnp.maximum(cnt, 1.0)
+
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        Lc = max_seq
+    elif kind == "local":
+        Lc = min(cfg.window, max_seq)
+    elif kind == "rglru":
+        return R.init_rglru_state(cfg, batch)
+    elif kind == "rwkv":
+        return R.init_rwkv_state(cfg, batch)
+    else:
+        raise ValueError(kind)
+    return {
+        "k": jnp.zeros((batch, Lc, Hkv, Dh), dt),
+        "v": jnp.zeros((batch, Lc, Hkv, Dh), dt),
+        "pos": jnp.full((Lc,), -1, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical shardings for the cache pytree (mirrors init_cache)."""
+    pat, n_groups, tail = group_layout(cfg)
+
+    def one(kind, stacked):
+        lead = ("layers",) if stacked else ()
+        if kind in ("attn", "local"):
+            # cache time axis sharded over TP ("cache_seq"): kv_heads
+            # rarely divide the 16-wide model axis, positions always do.
+            return {"k": lead + ("batch", "cache_seq", None, None),
+                    "v": lead + ("batch", "cache_seq", None, None),
+                    "pos": lead + (None,)}
+        if kind == "rglru":
+            return {"h": lead + ("batch", "rnn"),
+                    "conv": lead + ("batch", None, "rnn")}
+        return {"x_prev_t": lead + ("batch", "rnn"),
+                "x_prev_c": lead + ("batch", "rnn"),
+                "S": lead + ("batch", None, None, None)}
+
+    cache: PyTree = {}
+    if n_groups > 0:
+        cache["groups"] = {f"b{i}": one(kind, True)
+                           for i, kind in enumerate(pat)}
+    if tail:
+        cache["tail"] = [one(kind, False) for kind in tail]
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    pat, n_groups, tail = group_layout(cfg)
+    cache: PyTree = {}
+    if n_groups > 0:
+        def stack(kind):
+            one = _layer_cache(cfg, kind, batch, max_seq)
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (n_groups,) + t.shape),
+                one)
+        cache["groups"] = {f"b{i}": stack(kind)
+                           for i, kind in enumerate(pat)}
+    if tail:
+        cache["tail"] = [
+            _layer_cache(cfg, kind, batch, max_seq) for kind in tail]
+    return cache
+
+
+def _run_layers_cached(params, cfg, x, positions, cache, decode):
+    """Scan layers threading caches. Returns (x, new_cache)."""
+    pat, n_groups, tail = group_layout(cfg)
+    new_cache: PyTree = {}
+
+    if n_groups > 0:
+        def group_fn(x, xs):
+            gp, gc = xs
+            outs = {}
+            for i, kind in enumerate(pat):
+                x, _, nc = _apply_layer(gp[f"b{i}"], cfg, kind, x, positions,
+                                        cache=gc[f"b{i}"], decode=decode)
+                outs[f"b{i}"] = nc
+            return x, outs
+
+        x, gcache = jax.lax.scan(
+            group_fn, x, (params["groups"], cache["groups"]))
+        new_cache["groups"] = gcache
+
+    if tail:
+        new_cache["tail"] = []
+        for lp, kind, tc in zip(params["tail"], tail, cache["tail"]):
+            x, _, nc = _apply_layer(lp, cfg, kind, x, positions,
+                                    cache=tc, decode=decode)
+            new_cache["tail"].append(nc)
+    return x, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, PyTree]:
+    """Process the prompt; returns (last-position logits (B, V), cache).
+
+    Only the final position is projected to the vocabulary — projecting
+    all 32k prompt positions would materialize a (B, S, V) tensor for no
+    serving benefit.
+    """
+    x = _embed_tokens(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, new_cache = _run_layers_cached(params, cfg, x, positions, cache,
+                                      decode=False)
+    x_last = x[:, -1:]
+    x_last = L.apply_rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x_last)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step.  tokens: (B, 1) (audio: (B, K, 1)); pos: scalar.
+
+    Returns (logits (B, V) or (B, K, V), new_cache).
+    """
+    batch = {"tokens": tokens}
+    x = _embed_tokens(params, cfg, batch)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x, new_cache = _run_layers_cached(params, cfg, x, positions, cache,
+                                      decode=True)
+    x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,7 @@
+from repro.training.train import (  # noqa: F401
+    TrainConfig,
+    TrainState,
+    init_train_state,
+    train_state_specs,
+    make_train_step,
+)

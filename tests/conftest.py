@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests run on the
+single real CPU device; distributed behaviour is tested via subprocesses
+(tests/test_distributed.py) so the 512-device dry-run flag never leaks."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_lowrank(rng, m, n, spectrum):
+    """Matrix with a prescribed singular spectrum."""
+    k = len(spectrum)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    U, _, Vt = np.linalg.svd(A, full_matrices=False)
+    s = np.zeros(min(m, n), np.float32)
+    s[:k] = spectrum
+    return (U * s) @ Vt

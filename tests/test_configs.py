@@ -1,0 +1,99 @@
+"""Architecture registry, shape cells and input specs."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (SHAPES, cell_applicable, decode_input_specs,
+                           get_config, list_archs, prefill_input_specs,
+                           smoke_config, train_input_specs)
+
+EXPECTED = {
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "llava-next-34b": dict(num_layers=60, d_model=7168, num_heads=56,
+                           num_kv_heads=8, d_ff=20480, vocab_size=64000),
+    "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+    "starcoder2-15b": dict(num_layers=40, d_model=6144, num_heads=48,
+                           num_kv_heads=4, d_ff=24576, vocab_size=49152),
+    "yi-6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                  num_kv_heads=4, d_ff=11008, vocab_size=64000),
+    "gemma2-9b": dict(num_layers=42, d_model=3584, num_heads=16,
+                      num_kv_heads=8, d_ff=14336, vocab_size=256000),
+    "qwen3-0.6b": dict(num_layers=28, d_model=1024, num_heads=16,
+                       num_kv_heads=8, d_ff=3072, vocab_size=151936),
+    "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                        num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                        num_experts=8, experts_per_token=2),
+    "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120, num_heads=40,
+                                  num_kv_heads=8, d_ff=8192,
+                                  vocab_size=202048, num_experts=16,
+                                  experts_per_token=1),
+    "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32,
+                           d_ff=8192, vocab_size=2048, num_codebooks=4),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED))
+def test_exact_published_hyperparams(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long500k_applicability():
+    runs = [a for a in list_archs()
+            if cell_applicable(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["recurrentgemma-9b", "rwkv6-1.6b"]
+
+
+def test_train_input_specs_shapes():
+    cfg = get_config("yi-6b")
+    cell = SHAPES["train_4k"]
+    specs = train_input_specs(cfg, cell)
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["tokens"].dtype == jnp.int32
+
+    vlm = get_config("llava-next-34b")
+    specs = train_input_specs(vlm, cell)
+    assert specs["patch_embeds"].shape == (256, 576, 7168)
+    assert specs["tokens"].shape == (256, 4096 - 576)
+
+    audio = get_config("musicgen-large")
+    specs = train_input_specs(audio, cell)
+    assert specs["tokens"].shape == (256, 4, 4096)
+
+
+def test_decode_input_specs_cache_sizes():
+    cfg = get_config("gemma2-9b")
+    toks, cache, pos = decode_input_specs(cfg, SHAPES["decode_32k"])
+    assert toks.shape == (128, 1)
+    # local layers get a window-sized ring cache, global layers a full one
+    g = cache["groups"]
+    assert g["b0"]["k"].shape[2] == cfg.window        # local ring
+    assert g["b1"]["k"].shape[2] == 32768             # global full
+
+
+def test_prefill_input_specs_vlm_split():
+    cfg = get_config("llava-next-34b")
+    batch, cache = prefill_input_specs(cfg, SHAPES["prefill_32k"])
+    assert batch["tokens"].shape == (32, 32768 - 576)
+    assert batch["patch_embeds"].shape == (32, 576, 7168)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_config_small(arch):
+    sm = smoke_config(get_config(arch))
+    assert sm.d_model <= 128 and sm.vocab_size <= 256
+    assert sm.param_count() < 5e6

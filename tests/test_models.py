@@ -1,0 +1,161 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants.
+
+Every assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step on CPU, asserting output shapes and
+finiteness; decode-vs-forward consistency is asserted for every family.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw as opt
+
+
+def _batch_for(cfg, key, B=2, S=16):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (B, cfg.num_codebooks, S), 0,
+                                  cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.ones(
+            (B, cfg.patch_positions, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    batch = _batch_for(cfg, key)
+    B, S = 2, 16
+
+    logits, aux = T.forward(params, cfg, batch)
+    if cfg.family == "audio":
+        assert logits.shape == (B, S, cfg.num_codebooks, cfg.vocab_size)
+    elif cfg.family == "vlm":
+        assert logits.shape == (B, S + cfg.patch_positions, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one full train step: loss + grads finite, params update
+    loss, m = T.loss_fn(params, cfg, batch)
+    grads = jax.grad(lambda p: T.loss_fn(p, cfg, batch)[0])(params)
+    ostate = opt.init_opt_state(params, opt.AdamWConfig())
+    new_params, _, met = opt.apply_updates(params, grads, ostate,
+                                           opt.AdamWConfig())
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(met["grad_norm"])) and float(met["grad_norm"]) > 0
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_decode_matches_forward(arch):
+    cfg = smoke_config(get_config(arch))
+    if cfg.is_moe:  # capacity drops make strict equality config-dependent
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    key = jax.random.PRNGKey(1)
+    params = T.init_model(key, cfg)
+    B, S = 2, 16
+    batch = _batch_for(cfg, key, B, S)
+    logits_full, _ = T.forward(params, cfg, batch)
+
+    cache = T.init_cache(cfg, B, 32)
+    toks = batch["tokens"]
+    pre = dict(batch)
+    pre["tokens"] = toks[..., :S - 1]
+    pre.pop("labels")
+    _, cache = T.prefill(params, cfg, pre, cache)
+    dl, _ = T.decode_step(params, cfg, cache, toks[..., S - 1:],
+                          jnp.int32(S - 1 + (cfg.patch_positions or 0)))
+    ref = logits_full[:, -1]
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_long_context_flag():
+    assert get_config("rwkv6-1.6b").sub_quadratic
+    assert get_config("recurrentgemma-9b").sub_quadratic
+    for a in ("yi-6b", "gemma2-9b", "grok-1-314b", "musicgen-large"):
+        assert not get_config(a).sub_quadratic
+
+
+@pytest.mark.parametrize("arch,published_b", [
+    ("recurrentgemma-9b", 9.0), ("llava-next-34b", 34.0),
+    ("rwkv6-1.6b", 1.6), ("starcoder2-15b", 15.0), ("yi-6b", 6.0),
+    ("gemma2-9b", 9.0), ("qwen3-0.6b", 0.6), ("grok-1-314b", 314.0),
+    # musicgen-large is 3.3B incl. text-conditioning cross-attention; the
+    # assignment stubs the conditioning frontend, so the decoder-only
+    # backbone is ~2.4B (self-attn + FFN only).
+    ("llama4-scout-17b-a16e", 109.0), ("musicgen-large", 2.4),
+])
+def test_param_counts_near_published(arch, published_b):
+    got = get_config(arch).param_count() / 1e9
+    assert abs(got - published_b) / published_b < 0.25, (arch, got)
+
+
+def test_chunked_paths_exact():
+    base = ModelConfig(name="t", family="dense", num_layers=4, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                       dtype="float32", block_pattern=("local", "attn"),
+                       window=12)
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, base)
+    tokens = jax.random.randint(key, (2, 32), 0, 97)
+    batch = {"tokens": tokens, "labels": tokens}
+    l0, _ = T.loss_fn(params, base, batch)
+    cfgc = dataclasses.replace(base, attn_q_chunks=4, loss_chunks=8)
+    l1, _ = T.loss_fn(params, cfgc, batch)
+    assert abs(float(l1 - l0)) < 1e-5
+    g0 = jax.grad(lambda p: T.loss_fn(p, base, batch)[0])(params)
+    g1 = jax.grad(lambda p: T.loss_fn(p, cfgc, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_scan_vs_unrolled_layers_identical():
+    kw = dict(family="dense", d_model=64, num_heads=4, num_kv_heads=2,
+              d_ff=128, vocab_size=97, dtype="float32")
+    c_scan = ModelConfig(name="s", num_layers=4, scan_layers=True, **kw)
+    c_unrl = ModelConfig(name="u", num_layers=4, scan_layers=False, **kw)
+    key = jax.random.PRNGKey(0)
+    p_scan = T.init_model(key, c_scan)
+    # rebuild unrolled params from the stacked ones so weights match
+    flat_groups = p_scan["groups"]
+    tail = [jax.tree.map(lambda x, i=i: x[i], flat_groups["b0"])
+            for i in range(4)]
+    p_unrl = {"embed": p_scan["embed"], "final_norm": p_scan["final_norm"],
+              "tail": tail}
+    tokens = jax.random.randint(key, (2, 16), 0, 97)
+    l1, _ = T.forward(p_scan, c_scan, {"tokens": tokens})
+    l2, _ = T.forward(p_unrl, c_unrl, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_loss_mask_respected():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=50,
+                      dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    tokens = jax.random.randint(key, (2, 8), 0, 50)
+    m1 = {"tokens": tokens, "labels": tokens,
+          "loss_mask": jnp.ones((2, 8), jnp.float32)}
+    # mask out half: loss computed only over kept positions
+    half = jnp.concatenate([jnp.ones((2, 4)), jnp.zeros((2, 4))], 1)
+    m2 = {"tokens": tokens, "labels": tokens, "loss_mask": half}
+    l1, _ = T.loss_fn(params, cfg, m1)
+    l2, _ = T.loss_fn(params, cfg, m2)
+    assert abs(float(l1) - float(l2)) > 1e-6  # genuinely different subsets

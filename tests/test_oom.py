@@ -1,0 +1,102 @@
+"""Out-of-memory blocked computation: equivalence + batching invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HostBlockedMatrix, blocked_deflated_matvec,
+                        blocked_gram, make_batch_plan, make_partition,
+                        oom_tsvd, symmetric_tasks, tiled_gram)
+
+from conftest import make_lowrank
+
+
+def test_blocked_gram_matches_dense(rng):
+    A = rng.normal(size=(64, 24)).astype(np.float32)
+    B = blocked_gram(jnp.asarray(A.reshape(8, 8, 24)))
+    np.testing.assert_allclose(np.asarray(B), A.T @ A, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(nb=st.integers(1, 7), n=st.integers(8, 40), m=st.integers(8, 48),
+       seed=st.integers(0, 1000))
+def test_tiled_gram_any_batching(nb, n, m, seed):
+    """Paper Alg-3 invariant: the tile/batch decomposition never changes B."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    B = tiled_gram(jnp.asarray(A), nb)
+    np.testing.assert_allclose(np.asarray(B), A.T @ A, atol=1e-2)
+
+
+def test_symmetric_task_count():
+    """Reduced schedule: n_b(n_b+1)/2 tasks (paper Fig 2c: 10 < 16 at n_b=4)."""
+    for nb in (1, 2, 4, 7):
+        tasks = symmetric_tasks(nb)
+        assert len(tasks) == nb * (nb + 1) // 2
+        assert all(i <= j for i, j in tasks)
+    assert len(symmetric_tasks(4)) == 10
+
+
+def test_batch_plan_covers_everything():
+    for total, nb in [(100, 4), (7, 10), (64, 3)]:
+        plan = make_batch_plan(total, nb)
+        seen = []
+        for b in range(plan.n_batches):
+            lo, hi = plan.bounds(b)
+            seen.extend(range(lo, hi))
+        assert seen == list(range(total))
+
+
+def test_partition_selects_orientation():
+    p = make_partition(100, 40, 8)
+    assert p.row_major and p.m_pad % 8 == 0
+    p = make_partition(40, 100, 8)
+    assert not p.row_major and p.n_pad % 8 == 0
+
+
+def test_host_blocked_gram_and_matvec(rng):
+    A = rng.normal(size=(70, 20)).astype(np.float32)
+    op = HostBlockedMatrix(A, 4)
+    np.testing.assert_allclose(np.asarray(op.gram()), A.T @ A, atol=1e-3)
+    v = rng.normal(size=(20,)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matvec(jnp.asarray(v))),
+                               A @ v, atol=1e-3)
+
+
+def test_blocked_deflated_matvec_matches_direct(rng):
+    m, n, k, nb = 48, 20, 3, 4
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    U, _ = np.linalg.qr(rng.normal(size=(m, k)).astype(np.float32))
+    V, _ = np.linalg.qr(rng.normal(size=(n, k)).astype(np.float32))
+    S = np.array([5.0, 3.0, 1.0], np.float32)
+    v = rng.normal(size=(n,)).astype(np.float32)
+    got = blocked_deflated_matvec(
+        jnp.asarray(A.reshape(nb, m // nb, n)),
+        jnp.asarray(U.reshape(nb, m // nb, k)),
+        jnp.asarray(S), jnp.asarray(V), jnp.asarray(v))
+    X = A - (U * S) @ V.T
+    want = X.T @ (X @ v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(96, 32), (32, 96)])
+def test_oom_tsvd_matches_numpy(rng, shape):
+    A = make_lowrank(rng, *shape, spectrum=np.linspace(12, 2, 6))
+    res = oom_tsvd(A, 3, n_blocks=4, eps=1e-10, max_iters=500)
+    s_np = np.linalg.svd(A, compute_uv=False)[:3]
+    np.testing.assert_allclose(np.asarray(res.S), s_np, rtol=2e-3)
+    # factors orthonormal
+    np.testing.assert_allclose(np.asarray(res.U.T @ res.U), np.eye(3),
+                               atol=5e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(nb=st.integers(1, 6))
+def test_oom_tsvd_invariant_to_block_count(nb):
+    """Paper's degree-1 batching must not change the decomposition."""
+    rng = np.random.default_rng(7)
+    A = make_lowrank(rng, 60, 24, spectrum=np.linspace(9, 3, 4))
+    res = oom_tsvd(A, 2, n_blocks=nb, eps=1e-10, max_iters=500)
+    s_np = np.linalg.svd(A, compute_uv=False)[:2]
+    np.testing.assert_allclose(np.asarray(res.S), s_np, rtol=2e-3)
