@@ -1,10 +1,12 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-  accuracy        — t-SVD vs LAPACK (validation table)
-  scaling_dense   — paper Fig 3a (dense strong/weak scaling)
-  scaling_sparse  — paper Fig 3b (sparse Alg-4 scaling, 128 PB setup)
-  oom_batching    — paper Fig 4  (peak memory & time vs n_b, q_s)
-  roofline        — §Roofline terms from the dry-run artifacts
+  accuracy           — t-SVD vs LAPACK (validation table)
+  scaling_dense      — paper Fig 3a (dense strong/weak scaling)
+  scaling_sparse     — paper Fig 3b (sparse Alg-4 scaling, 128 PB setup)
+  oom_batching       — paper Fig 4  (peak memory & time vs n_b, q_s)
+  block_vs_deflation — passes-over-A + wall-clock: block subspace
+                       iteration vs rank-one deflation
+  roofline           — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]``
 """
@@ -24,13 +26,14 @@ def main():
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, oom_batching, roofline, scaling_dense,
-                            scaling_sparse)
+    from benchmarks import (accuracy, block_vs_deflation, oom_batching,
+                            roofline, scaling_dense, scaling_sparse)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
         "scaling_sparse": scaling_sparse.run,
         "oom_batching": oom_batching.run,
+        "block_vs_deflation": block_vs_deflation.run,
         "roofline": roofline.run,
     }
     results = {}

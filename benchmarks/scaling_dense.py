@@ -63,14 +63,14 @@ def modeled_times(node_counts=(1, 2, 4, 8, 16, 32)):
 
 _CHILD = r"""
 import time, numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh as compat_make_mesh
 from repro.core import dist_tsvd
 results = {}
 rng = np.random.default_rng(0)
 m, n, k = 1024, 256, 8
 A = rng.normal(size=(m, n)).astype(np.float32)
 for N in (1, 2, 4, 8):
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((N,), ("data",))
     # warmup/compile
     r = dist_tsvd(jnp.asarray(A), k, mesh, method="gram", force_iters=True,
                   max_iters=5)

@@ -25,9 +25,11 @@ import shutil
 import jax
 import numpy as np
 
+from repro import compat
+
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = compat.tree_flatten_with_path(tree)
     keys = ["/".join(str(k) for k in path) for path, _ in flat]
     vals = [v for _, v in flat]
     return keys, vals, treedef

@@ -1,0 +1,137 @@
+"""Compatibility layer over the installed jax version.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.lax.pvary``, ``jax.lax.all_gather_invariant``, typed mesh axes).
+Older pinned jax releases (0.4.x) predate all four; this module provides
+the exact fallbacks so every call site can import from one place:
+
+* ``shard_map``       — ``jax.shard_map`` or ``jax.experimental.shard_map``.
+* ``pvary``           — identity on pre-vma jax (the varying-manual-axes
+  type system the real ``pvary`` feeds does not exist there).
+* ``all_gather_inv``  — ``all_gather_invariant`` where present, else plain
+  ``all_gather`` (whose output is already treated as replicated by the
+  older shard_map replication checker).
+* ``AxisType`` / ``make_mesh`` — typed mesh axes where supported, silently
+  dropped otherwise (0.4.x meshes behave as Auto).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.6: top-level export with axis_names= partial-manual API
+    _new_shard_map = jax.shard_map
+
+    def shard_map(f, **kwargs):
+        return _new_shard_map(f, **kwargs)
+
+except AttributeError:  # 0.4.x: experimental module, auto= complement API
+    from jax.experimental.shard_map import shard_map as _ex_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, **kwargs):
+        if axis_names is not None:
+            # new API names the MANUAL axes; old API names the AUTO ones
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            kwargs.setdefault("auto", auto)
+        # 0.4.x replication checking lacks rules for while/scan bodies
+        # (jax#workaround in the error message itself): disable it.
+        kwargs.setdefault("check_rep", False)
+        return _ex_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+
+# Partial-manual shard_map (manual over a subset of axes) with control
+# flow in the body hard-crashes the 0.4.x XLA SPMD partitioner
+# (hlo_sharding_util CHECK IsManualSubgroup); only the new API supports it.
+SUPPORTS_PARTIAL_MANUAL = hasattr(jax, "shard_map")
+
+try:
+    pvary = jax.lax.pvary
+except AttributeError:  # pre-vma jax: values are not vma-typed; no-op
+    def pvary(x, axis_name):  # noqa: ARG001
+        return x
+
+try:
+    from jax.lax import all_gather_invariant as all_gather_inv
+except ImportError:
+    try:  # some 0.8.x builds keep it under _src
+        from jax._src.lax.parallel import all_gather_invariant as all_gather_inv
+    except ImportError:  # 0.4.x: plain all_gather is replication-checked
+        def all_gather_inv(x, axis_name, *, tiled=False):
+            return jax.lax.all_gather(x, axis_name, tiled=tiled)
+
+try:
+    from jax.sharding import AxisType
+    _HAS_AXIS_TYPES = True
+except ImportError:
+    class AxisType:  # sentinel so call sites can still name Auto axes
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPES = False
+
+
+def make_mesh(shape, axes, axis_types=None):
+    """``jax.make_mesh`` that tolerates jax versions without axis_types."""
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
+
+
+def AbstractMesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across constructor generations.
+
+    New jax takes ``(axis_sizes, axis_names)``; 0.4.x takes one
+    ``((name, size), ...)`` shape tuple.
+    """
+    try:
+        return jax.sharding.AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+try:
+    tree_flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:  # 0.4.x keeps it in jax.tree_util only
+    from jax.tree_util import tree_flatten_with_path
+
+
+def get_abstract_mesh():
+    """Ambient mesh: abstract on new jax, the physical context mesh on old.
+
+    Both return objects expose ``.empty``, ``.axis_names`` and ``.shape``;
+    ``.axis_types`` only exists on new jax — call sites getattr-guard it.
+    """
+    try:
+        return jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        from jax.interpreters import pxla
+        return pxla.thread_resources.env.physical_mesh
+
+
+def manual_axis_names() -> set:
+    """Mesh axes bound manually at trace time (inside a shard_map body).
+
+    New jax exposes this through the abstract mesh's axis types; old jax
+    only through the core axis env — used so sharding constraints never
+    name an axis that shard_map already made manual.
+    """
+    try:
+        from jax._src.core import get_axis_env
+        return set(getattr(get_axis_env(), "axis_sizes", {}).keys())
+    except Exception:
+        return set()
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh for constraints and jit."""
+    try:
+        ctx = jax.sharding.set_mesh(mesh)
+    except AttributeError:  # 0.4.x: Mesh is itself the context manager
+        ctx = mesh
+    with ctx:
+        yield mesh

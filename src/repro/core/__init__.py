@@ -5,6 +5,8 @@ from repro.core.tsvd import (  # noqa: F401
     svd_1d,
     power_iterate_gram,
     power_iterate_chain,
+    block_power_iterate,
+    rayleigh_ritz,
     reconstruct,
     relative_error,
 )

@@ -23,6 +23,13 @@ Two fidelity levels are provided and benchmarked separately (§Perf):
   (3) the Gram path keeps ``B`` *row-sharded* (reduce-scatter instead of
       all-reduce) so per-chip memory and mat-vec FLOPs drop by N, at the
       cost of one all-gather of the iterate per step.
+
+``method="block"`` swaps rank-one deflation for block subspace iteration:
+the row-sharded operator applies ``A_loc`` to the full ``(n, k)`` iterate
+and ONE ``psum`` of the ``(n, k)`` payload per step advances all k ranks
+(deflation issues one or three collectives per step *per rank*).  The
+triplet is extracted by Rayleigh–Ritz through the psum'd ``(k, k)`` Gram
+of ``W = A Q``, so no distributed QR of a tall matrix is ever needed.
 """
 from __future__ import annotations
 
@@ -33,10 +40,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # varying -> invariant all-gather (replicated output, vma-typed)
-    from jax.lax import all_gather_invariant as _all_gather_inv
-except ImportError:  # pinned jax 0.8.x keeps it under _src
-    from jax._src.lax.parallel import all_gather_invariant as _all_gather_inv
+# varying -> invariant all-gather (replicated output) + version shims
+from repro.compat import all_gather_inv as _all_gather_inv
+from repro.compat import pvary as _pvary
+from repro.compat import shard_map as _shard_map
+from repro.core.tsvd import block_power_iterate as _block_power_iterate
 
 
 class DistTSVDResult(NamedTuple):
@@ -101,7 +109,7 @@ def _deflated_chain_step(A_loc, U_loc, S, V, v, axes, *, faithful, n_blocks):
 
         n = A_loc.shape[1]
         init = (jnp.zeros((n,), jnp.float32), jnp.zeros((k,), jnp.float32))
-        init = jax.lax.pvary(init, tuple(axes))  # carries vary per shard
+        init = _pvary(init, tuple(axes))  # carries vary per shard
         (t13_part, utxv_part), _ = jax.lax.scan(step, init, (A_blk, U_blk))
         if rows_b * n_blocks != m_loc:  # ragged tail
             a_t = A_loc[rows_b * n_blocks:]
@@ -137,8 +145,8 @@ def _power_loop(matvec, v0, *, eps, max_iters, force_iters, axes=None):
         done = jnp.abs(jnp.vdot(v, v1)) >= 1.0 - eps
         return i + 1, v1, done
 
-    v0 = v0 if axes is None else jax.lax.pvary(v0, axes)
-    done0 = jnp.array(False) if axes is None else jax.lax.pvary(
+    v0 = v0 if axes is None else _pvary(v0, axes)
+    done0 = jnp.array(False) if axes is None else _pvary(
         jnp.array(False), axes)
     init = (jnp.array(0, jnp.int32), v0, done0)
     iters, v, _ = jax.lax.while_loop(cond, body, init)
@@ -155,7 +163,7 @@ def dist_tsvd(
     mesh: Mesh,
     *,
     axes: tuple[str, ...] = ("data",),
-    method: str = "gramfree",       # "gram" | "gramfree"
+    method: str = "gramfree",       # "gram" | "gramfree" | "block"
     faithful: bool = False,
     n_blocks: int = 1,              # in-shard OOM batches (paper n_b)
     eps: float = 1e-6,
@@ -169,6 +177,14 @@ def dist_tsvd(
     swapping U/V out.  ``m`` must be divisible by the product of the mesh
     axis sizes (pad upstream; `repro.core.partition` does the bookkeeping).
     """
+    if method not in ("gram", "gramfree", "block"):
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'gram' | 'gramfree' | 'block'")
+    if method == "block" and (faithful or n_blocks != 1):
+        # no paper-faithful schedule exists for the block method, and its
+        # step is one fused matmat — in-shard batching is not implemented
+        raise ValueError("method='block' supports neither faithful=True "
+                         "nor n_blocks > 1")
     m, n = A.shape
     transposed = m < n
     if transposed:
@@ -185,7 +201,7 @@ def dist_tsvd(
     repl = P(None)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(row_spec, P(None)),
         out_specs=(row_spec, P(None), P(None, None), P(None)),
@@ -194,7 +210,35 @@ def dist_tsvd(
         key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr[0])
         m_loc = A_loc.shape[0]
         A32 = A_loc.astype(jnp.float32)
-        U_loc = jax.lax.pvary(jnp.zeros((m_loc, k), jnp.float32), axes)
+
+        if method == "block":
+            Q0 = jnp.linalg.qr(
+                jax.random.normal(key, (n, k), jnp.float32))[0]
+
+            def matmat(Q):
+                # ONE fused (n, k) psum per step advances all k ranks;
+                # deflation pays >= one collective per step per rank.
+                return jax.lax.psum(A32.T @ (A32 @ Q), axes)
+
+            Q, iters = _block_power_iterate(
+                matmat, Q0, eps=eps, max_iters=max_iters,
+                force_iters=force_iters, axes=axes)
+            # Rayleigh–Ritz through the psum'd (k, k) Gram of W = A Q —
+            # no distributed QR of the tall factor is needed.
+            W_loc = A32 @ Q                            # (m_loc, k) sharded
+            G = jax.lax.psum(W_loc.T @ W_loc, axes)    # (k, k) replicated
+            lam, P_g = jnp.linalg.eigh(G)              # ascending order
+            lam, P_g = lam[::-1], P_g[:, ::-1]
+            S = jnp.sqrt(jnp.clip(lam, 0.0))
+            # Zero — don't 1/eps-blow-up — directions beyond the numerical
+            # rank (lam ~ 0): their U columns are noise either way, but
+            # this keeps every entry finite when k > rank(A).
+            inv = jnp.where(S > 1e-6 * S[0], 1.0 / (S + 1e-30), 0.0)
+            U_blk = (W_loc @ P_g) * inv[None, :]
+            V_blk = Q @ P_g
+            return U_blk, S, V_blk, jnp.full((k,), iters, jnp.int32)
+
+        U_loc = _pvary(jnp.zeros((m_loc, k), jnp.float32), axes)
         S = jnp.zeros((k,), jnp.float32)
         V = jnp.zeros((n, k), jnp.float32)
         iters_out = jnp.zeros((k,), jnp.int32)

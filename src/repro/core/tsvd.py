@@ -6,7 +6,7 @@ t-SVD: rank-one deflation (Alg 1) around a Gram-matrix power iteration
 validated against this module, and this module is validated against
 ``numpy.linalg.svd`` in the tests.
 
-Two deflation realizations are provided, mirroring the paper:
+Three factorization strategies are provided:
 
 * ``gram``      — materialize the deflated residual ``X = A - U S V^T`` and
                   its Gram matrix ``B`` (paper's dense path, Alg 1 line 8 +
@@ -14,8 +14,20 @@ Two deflation realizations are provided, mirroring the paper:
 * ``gramfree``  — never materialize residual or Gram; evaluate
                   ``v1 = B v0`` as the right-to-left mat-vec chain of
                   Eq. (2)/(3) (paper's sparse path, Alg 4 semantics).
+* ``block``     — beyond-paper block (subspace) power iteration in the
+                  style of Lu et al. (arXiv:1706.07191): iterate a whole
+                  ``(n, k)`` block ``Q <- orth(A^T A Q)`` (QR re-
+                  orthonormalization each step), then extract the triplet
+                  by Rayleigh–Ritz.  One pass over ``A`` advances ALL k
+                  ranks at once, so a rank-k factorization costs
+                  ``O(iters)`` passes instead of deflation's
+                  ``O(sum_l iters_l)`` — typically 10-100x fewer sweeps of
+                  the dominant data-movement term — at the price of
+                  ``O((m + n) k)`` extra working memory for the block.
 
-Both must agree to numerical precision; the property tests assert this.
+Deflation (``gram``/``gramfree``) stays the default and the numerical
+oracle; the property tests assert that all strategies agree with
+``numpy.linalg.svd`` and with each other to tolerance.
 """
 from __future__ import annotations
 
@@ -157,6 +169,93 @@ def power_iterate_chain(
     return v, iters
 
 
+def block_power_iterate(
+    matmat,
+    Q0: jax.Array,
+    *,
+    eps: float = 1e-6,
+    max_iters: int = 100,
+    force_iters: bool = False,
+    axes: tuple[str, ...] | None = None,
+):
+    """Subspace iteration ``Q <- qr(B @ Q)`` with Ritz-value stopping.
+
+    ``matmat`` applies the (possibly implicit) Gram operator ``B`` to an
+    ``(n, k)`` block; ``Q0`` must have orthonormal columns.  Convergence
+    is tested on the SUBSPACE, not per column: ``k - ||Q^T Q_new||_F^2``
+    is the sum of squared sines of the principal angles between successive
+    iterates, so it is invariant to rotations within the subspace —
+    per-column tests (the scalar method's ``|v . v1|``) never settle when
+    singular values are clustered, even though the subspace (and hence the
+    Rayleigh–Ritz extraction) converged long ago.  Returns ``(Q, iters)``.
+
+    ``axes`` is only used inside ``shard_map`` (``dist_svd``): ``matmat``
+    must then return psum'd — shard-identical — blocks, and the carry is
+    marked mesh-varying for vma-typed jax versions.
+    """
+    k = Q0.shape[1]
+
+    def cond(state):
+        i, _, done = state
+        if force_iters:
+            return i < max_iters
+        return jnp.logical_and(i < max_iters, jnp.logical_not(done))
+
+    def body(state):
+        i, Q, _ = state
+        Z = matmat(Q)
+        Qn, _ = jnp.linalg.qr(Z)
+        # sum of cos^2 of principal angles between span(Q) and span(Qn)
+        ssc = jnp.sum((Q.T @ Qn) ** 2)
+        done = (k - ssc) <= eps * k
+        return i + 1, Qn, done
+
+    init = (jnp.array(0, jnp.int32), Q0, jnp.array(False))
+    if axes is not None:
+        from repro.compat import pvary
+        init = pvary(init, tuple(axes))
+    iters, Q, _ = jax.lax.while_loop(cond, body, init)
+    return Q, iters
+
+
+def rayleigh_ritz_from_W(W: jax.Array, Q: jax.Array):
+    """Rayleigh–Ritz extraction from a precomputed projection ``W = X Q``.
+
+    QR the skinny ``W`` and SVD only the small ``(k, k)`` triangle —
+    ``O((M + N) k^2)``, no dense SVD of ``X``, and QR keeps the extra
+    columns orthonormal (finite) when k exceeds the numerical rank.
+    Shared by the serial, out-of-core, and sparse block paths.
+    """
+    Uw, Rw = jnp.linalg.qr(W)
+    Us, S, Vh = jnp.linalg.svd(Rw)             # (k, k) — tiny
+    return Uw @ Us, S, Q @ Vh.T
+
+
+def rayleigh_ritz(X: jax.Array, Q: jax.Array):
+    """Extract ``(U, S, V)`` from a converged right-subspace basis ``Q``.
+
+    ``X (M, N)`` tall, ``Q (N, k)`` orthonormal; costs one pass over
+    ``X`` plus the small factorizations of ``rayleigh_ritz_from_W``.
+    """
+    return rayleigh_ritz_from_W(X @ Q, Q)      # (M, k) one pass over X
+
+
+def _block_tsvd(A, k, key, *, eps, max_iters, force_iters):
+    """Rank-k t-SVD by block subspace iteration + Rayleigh–Ritz."""
+    m, n = A.shape
+    tall = m >= n
+    X = A if tall else A.T                      # (M, N), M >= N
+    N = X.shape[1]
+    Q0 = jnp.linalg.qr(jax.random.normal(key, (N, k), jnp.float32))[0]
+    Q, iters = block_power_iterate(
+        lambda Q: X.T @ (X @ Q),                # two passes over X per step
+        Q0, eps=eps, max_iters=max_iters, force_iters=force_iters)
+    U, S, V = rayleigh_ritz(X, Q)
+    if not tall:
+        U, V = V, U
+    return TSVDResult(U, S, V, jnp.full((k,), iters, jnp.int32))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "eps", "max_iters", "force_iters", "method"),
@@ -169,18 +268,28 @@ def tsvd(
     eps: float = 1e-6,
     max_iters: int = 200,
     force_iters: bool = False,
-    method: str = "gram",  # "gram" | "gramfree"
+    method: str = "gram",  # "gram" | "gramfree" | "block"
 ) -> TSVDResult:
-    """Paper Alg 1: truncated SVD of ``A`` to rank ``k`` by deflation.
+    """Truncated SVD of ``A`` to rank ``k``.
 
     ``method="gram"`` materializes the deflated residual + Gram each rank
-    (paper's dense path); ``method="gramfree"`` uses the Eq. 2/3 mat-vec
-    chain (paper's sparse path).  Results are identical up to round-off.
+    (paper Alg 1 dense path); ``method="gramfree"`` uses the Eq. 2/3
+    mat-vec chain (paper's sparse path) — those two are identical up to
+    round-off.  ``method="block"`` replaces rank-one deflation with block
+    subspace iteration (all k ranks advance per pass over ``A``) and
+    agrees with the deflation methods to iteration tolerance; its
+    ``iters`` output holds the shared block iteration count in every slot.
     """
+    if method not in ("gram", "gramfree", "block"):
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'gram' | 'gramfree' | 'block'")
     if key is None:
         key = jax.random.PRNGKey(0)
     m, n = A.shape
     A = A.astype(jnp.float32)
+    if method == "block":
+        return _block_tsvd(A, k, key, eps=eps, max_iters=max_iters,
+                           force_iters=force_iters)
     tall = m >= n
 
     U = jnp.zeros((m, k), jnp.float32)

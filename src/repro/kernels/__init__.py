@@ -2,6 +2,9 @@
 
 * ``gram``            — tiled ``A^T A`` (paper Alg 3: batch/tile + symmetric tasks)
 * ``deflate_matvec``  — fused Alg-4 deflated power step sweeps
+* ``block_matvec``    — multi-vector ``A Q`` / ``A^T Y`` sweeps for the
+                        block subspace-iteration method (k columns per
+                        pass over A)
 * ``local_attn``      — causal sliding-window flash attention (serving hot spot)
 
 Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd
@@ -10,10 +13,14 @@ public wrapper (padding + CPU interpret fallback).
 from repro.kernels.ops import (  # noqa: F401
     gram,
     matvec,
+    block_matvec,
+    block_rmatvec,
     deflate_rmatvec,
     local_attention,
     gram_ref,
     matvec_ref,
+    block_matvec_ref,
+    block_rmatvec_ref,
     deflate_rmatvec_ref,
     local_attention_ref,
 )

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import block_matvec as _bm
 from repro.kernels import gram as _gram
 from repro.kernels import deflate_matvec as _dm
 from repro.kernels import local_attn as _la
@@ -68,6 +69,32 @@ def deflate_rmatvec(A, U, Xv, SVtv, *, bm: int = 512, bn: int = 512,
     return t13[:n], utxv
 
 
+def block_matvec(A, Q, *, bm: int = 512, bn: int = 512,
+                 interpret: bool | None = None):
+    """``A @ Q`` via the multi-vector Pallas kernel (padded); fp32 out.
+
+    Zero rows/cols of the padding contribute nothing; Q's padded rows
+    multiply padded columns of A only, so cropping is exact.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    Ap = _pad_to(A, (bm, bn))
+    Qp = _pad_to(Q, (bn, 1))
+    return _bm.block_matvec(Ap, Qp, bm=bm, bn=bn, interpret=interpret)[:m]
+
+
+def block_rmatvec(A, Y, *, bm: int = 512, bn: int = 512,
+                  interpret: bool | None = None):
+    """``A^T @ Y`` via the multi-vector Pallas kernel (padded); fp32 out."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    Ap = _pad_to(A, (bm, bn))
+    Yp = _pad_to(Y, (bm, 1))
+    return _bm.block_rmatvec(Ap, Yp, bm=bm, bn=bn, interpret=interpret)[:n]
+
+
 def local_attention(q, k, v, *, window: int, softcap: float | None = None,
                     bq: int = 128, bk: int = 128,
                     interpret: bool | None = None):
@@ -95,5 +122,7 @@ def local_attention(q, k, v, *, window: int, softcap: float | None = None,
 # Re-export oracles for convenience in tests/benchmarks.
 gram_ref = _ref.gram_ref
 matvec_ref = _ref.matvec_ref
+block_matvec_ref = _ref.block_matvec_ref
+block_rmatvec_ref = _ref.block_rmatvec_ref
 deflate_rmatvec_ref = _ref.deflate_rmatvec_ref
 local_attention_ref = _ref.local_attention_ref

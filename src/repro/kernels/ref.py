@@ -20,6 +20,16 @@ def matvec_ref(A: jax.Array, v: jax.Array) -> jax.Array:
     return A.astype(jnp.float32) @ v.astype(jnp.float32)
 
 
+def block_matvec_ref(A: jax.Array, Q: jax.Array) -> jax.Array:
+    """``Y = A @ Q`` in fp32 (multi-vector forward sweep)."""
+    return A.astype(jnp.float32) @ Q.astype(jnp.float32)
+
+
+def block_rmatvec_ref(A: jax.Array, Y: jax.Array) -> jax.Array:
+    """``Z = A^T @ Y`` in fp32 (multi-vector reverse sweep)."""
+    return A.astype(jnp.float32).T @ Y.astype(jnp.float32)
+
+
 def deflate_rmatvec_ref(
     A: jax.Array,      # (m, n)
     U: jax.Array,      # (m, k)

@@ -12,14 +12,16 @@ state (the dry-run must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int | None = None, model: int = 1) -> Mesh:
@@ -27,5 +29,5 @@ def make_host_mesh(data: int | None = None, model: int = 1) -> Mesh:
     n = jax.device_count()
     if data is None:
         data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

@@ -9,6 +9,9 @@ Lowers ONE deflated power step (the paper's inner loop) for the paper's
   chain/faithful   Alg 4, three all-reduces per step (paper lines 6/8/16)
   chain/opt        fused single all-reduce per step (ours)
 
+  block/opt        block subspace iteration: one (n, k) psum per step
+                   advances ALL k ranks (ours; deflation pays per-rank)
+
 Records FLOPs / bytes / per-collective bytes for §Perf — the
 paper-faithful vs beyond-paper comparison on the technique itself.
 """
@@ -22,6 +25,7 @@ import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import shard_map as _shard_map  # noqa: E402
 from repro.core.dist_svd import (_deflated_chain_step,  # noqa: E402
                                  _all_gather_inv)
 from repro.launch.dryrun import analyze, RESULTS_DIR  # noqa: E402
@@ -39,7 +43,7 @@ def lower_variant(mesh, kind: str, faithful: bool):
     row_spec = P(axes, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(row_spec, row_spec, P(None), P(None, None), P(None)),
         out_specs=P(None))
     def power_step(A_loc, U_loc, S, V, v):
@@ -70,6 +74,28 @@ def lower_variant(mesh, kind: str, faithful: bool):
     return jax.jit(power_step).lower(*args)
 
 
+def lower_block_variant(mesh):
+    """One BLOCK power step (method="block"): Y = A Q, Z = psum(A^T Y),
+    QR — a single fused (n, k) collective advances all K ranks."""
+    axes = ("data", "model")
+    row_spec = P(axes, None)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(row_spec, P(None, None)),
+        out_specs=P(None, None))
+    def block_step(A_loc, Q):
+        Y = A_loc @ Q                                  # (m_loc, K) local
+        Z = jax.lax.psum(A_loc.T @ Y, axes)            # ONE collective
+        Qn, _ = jnp.linalg.qr(Z)
+        return Qn
+
+    sds = lambda shape, spec: jax.ShapeDtypeStruct(
+        shape, jnp.float32, sharding=NamedSharding(mesh, spec))
+    args = (sds((M_GLOBAL, N), row_spec), sds((N, K), P(None, None)))
+    return jax.jit(block_step).lower(*args)
+
+
 def main():
     mesh = make_production_mesh()
     out = {}
@@ -83,6 +109,15 @@ def main():
             print(f"[ ok ] {tag}: flops={r.get('flops', 0):.3e} "
                   f"coll={r.get('collective_bytes_total', 0)/1e6:.1f}MB",
                   flush=True)
+    # the block method's step (all K ranks per pass; divide its
+    # per-step cost by K when comparing against the per-rank variants)
+    print("[run ] svd power step block/opt", flush=True)
+    lw = lower_block_variant(mesh)
+    out["block/opt"] = analyze(lw)
+    r = out["block/opt"]
+    print(f"[ ok ] block/opt: flops={r.get('flops', 0):.3e} "
+          f"coll={r.get('collective_bytes_total', 0)/1e6:.1f}MB",
+          flush=True)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(os.path.dirname(RESULTS_DIR.rstrip("/")),
                         "svd_dryrun.json")

@@ -25,6 +25,8 @@ import threading
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # logical axis -> physical mesh axis (or tuple, or None)
 DEFAULT_RULES: dict[str, object] = {
     # global batch is split across pod and data axes
@@ -56,7 +58,7 @@ _STATE = threading.local()
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
     """Install ``mesh`` as the ambient mesh for ``constrain`` and jit."""
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         yield mesh
 
 
@@ -81,9 +83,12 @@ def _mesh_axes(mesh: Mesh) -> set[str]:
     with_sharding_constraint)."""
     try:
         types = dict(zip(mesh.axis_names, mesh.axis_types))
-        return {n for n, t in types.items() if "Manual" not in str(t)}
+        axes = {n for n, t in types.items() if "Manual" not in str(t)}
     except Exception:
-        return set(mesh.axis_names)
+        axes = set(mesh.axis_names)
+    # On jax versions without typed mesh axes, manual axes are only
+    # visible through the trace-time axis env.
+    return axes - compat.manual_axis_names()
 
 
 def resolve_spec(logical: tuple[str | None, ...], mesh: Mesh,
@@ -137,8 +142,13 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
 
     No-op outside a mesh context (unit tests on one device).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or not mesh.axis_names:
+        return x
+    if not compat._HAS_AXIS_TYPES and compat.manual_axis_names():
+        # Old jax/XLA cannot mix GSPMD constraints with a partial-manual
+        # shard_map region (hlo_sharding_util CHECK) — let auto sharding
+        # propagate instead of constraining.
         return x
     spec = resolve_spec(tuple(logical), mesh, tuple(x.shape))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

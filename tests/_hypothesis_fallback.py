@@ -1,0 +1,83 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test suite property-tests with real Hypothesis where available (CI
+installs it from ``pyproject.toml``).  Hermetic environments without the
+package fall back to this shim: ``@given`` draws a fixed number of
+examples from a seeded PRNG, so the property tests still exercise many
+input shapes/seeds and stay reproducible — they just lose shrinking and
+adaptive example generation.
+
+Registered into ``sys.modules`` by ``conftest.py`` *only* when the real
+package is absent; it never shadows a genuine install.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    """Base strategy: knows how to draw one value from a numpy Generator."""
+
+    def draw(self, rng: np.random.Generator):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def draw(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+def integers(min_value: int, max_value: int) -> _Integers:
+    return _Integers(min_value, max_value)
+
+
+def settings(*, max_examples: int = 10, deadline=None, **_ignored):
+    """Record ``max_examples`` on the (already-wrapped) test function."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Call the test ``max_examples`` times with deterministic draws."""
+
+    def deco(fn):
+        # NOTE: deliberately zero-arg (and no functools.wraps) so pytest
+        # does not mistake the drawn parameters for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    mod.strategies = strategies
+    mod.__fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

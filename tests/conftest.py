@@ -4,6 +4,13 @@ single real CPU device; distributed behaviour is tested via subprocesses
 import numpy as np
 import pytest
 
+try:  # prefer the real property-testing engine (declared in pyproject.toml)
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # hermetic env: deterministic fallback shim
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 
 @pytest.fixture
 def rng():

@@ -25,8 +25,9 @@ def run_child(code: str) -> str:
 
 DIST_SVD_CHECKS = r"""
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh as compat_make_mesh
 from repro.core import dist_tsvd
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 U0, _, Vt0 = np.linalg.svd(rng.normal(size=(128, 48)).astype(np.float32),
                            full_matrices=False)
@@ -50,11 +51,31 @@ r = dist_tsvd(jnp.asarray(A), 4, mesh, eps=1e-10, max_iters=500)
 U = np.asarray(r.U)
 np.testing.assert_allclose(U.T @ U, np.eye(4), atol=5e-3)
 # two-axis distribution (pod x data)
-mesh2 = jax.make_mesh((2, 4), ("pod", "data"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = compat_make_mesh((2, 4), ("pod", "data"))
 r2 = dist_tsvd(jnp.asarray(A), 3, mesh2, axes=("pod", "data"),
                eps=1e-10, max_iters=500)
 np.testing.assert_allclose(np.asarray(r2.S), s0[:3], rtol=2e-3)
+# block subspace iteration: one fused (n, k) psum per step, all paths
+r = dist_tsvd(jnp.asarray(A), 8, mesh, method="block", eps=1e-8,
+              max_iters=500)
+np.testing.assert_allclose(np.asarray(r.S), s0[:8], rtol=2e-3)
+U = np.asarray(r.U)
+np.testing.assert_allclose(U.T @ U, np.eye(8), atol=5e-3)
+r = dist_tsvd(jnp.asarray(A.T), 4, mesh, method="block", eps=1e-8,
+              max_iters=500)  # wide/CSVD orientation
+np.testing.assert_allclose(np.asarray(r.S), s0[:4], rtol=2e-3)
+r2 = dist_tsvd(jnp.asarray(A), 3, mesh2, axes=("pod", "data"),
+               method="block", eps=1e-8, max_iters=500)
+np.testing.assert_allclose(np.asarray(r2.S), s0[:3], rtol=2e-3)
+# rank-deficient block: extras ~0 and every factor entry stays finite
+s_def = np.zeros(48, np.float32); s_def[:4] = [9, 7, 5, 3]
+A_def = (U0 * s_def) @ Vt0
+r = dist_tsvd(jnp.asarray(A_def), 6, mesh, method="block", eps=1e-6,
+              max_iters=300)
+np.testing.assert_allclose(np.asarray(r.S)[:4], s_def[:4], rtol=2e-3)
+assert np.all(np.asarray(r.S)[4:] < 1e-3 * s_def[0])
+assert np.all(np.isfinite(np.asarray(r.U)))
+assert np.all(np.isfinite(np.asarray(r.V)))
 print("DIST_SVD_OK")
 """
 
@@ -65,6 +86,7 @@ def test_distributed_svd_all_paths():
 
 SHARDED_TRAIN_CHECKS = r"""
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh as compat_make_mesh
 from repro.models.config import ModelConfig
 from repro.models import transformer as T
 from repro import sharding as Sh
@@ -73,8 +95,7 @@ from repro.training import TrainConfig, init_train_state, make_train_step
 from repro.optim.adamw import AdamWConfig
 from repro.optim.compression import CompressionConfig
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 dc = DataConfig(vocab_size=64, seq_len=32, global_batch=8)
 ds = SyntheticLMDataset(dc)
 
@@ -105,8 +126,7 @@ print("SHARDED_TRAIN_OK")
 
 # multi-pod compressed-gradient training (the paper's technique crossing
 # the pod axis) must equal... at least run and learn
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh3 = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = ModelConfig(name="c", family="dense", **base)
 tc = TrainConfig(adamw=AdamWConfig(lr=1e-2),
                  compression=CompressionConfig(enabled=True, rank=4,
@@ -132,6 +152,7 @@ def test_sharded_training_and_pod_compression():
 
 ELASTIC_CHECKS = r"""
 import tempfile, numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh as compat_make_mesh
 from repro.checkpoint import CheckpointManager
 from repro.models.config import ModelConfig
 from repro.models import transformer as T
@@ -143,8 +164,7 @@ cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
 params = T.init_model(jax.random.PRNGKey(0), cfg)
 specs = T.model_specs(cfg)
 
-mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh8 = compat_make_mesh((4, 2), ("data", "model"))
 sh8 = Sh.tree_shardings(specs, mesh8,
                         jax.tree.map(lambda x: x.shape, params))
 p8 = jax.device_put(params, sh8)

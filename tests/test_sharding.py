@@ -1,6 +1,8 @@
 """Logical-axis rules: resolution, divisibility fallback, overrides."""
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import AbstractMesh
 
 from repro import sharding as Sh
 
