@@ -50,7 +50,8 @@ def run(fast: bool = True):
     sp = SyntheticSparseMatrix(m=512, n=128, nnz_per_row=6, seed=2, chunk=64)
     sd = np.linalg.svd(sp.row_block_dense(0, 512), compute_uv=False)[:4]
     t0 = time.time()
-    U, S, V = sparse_tsvd(sp, 4, eps=1e-12, max_iters=1500, block_rows=128)
+    U, S, V = sparse_tsvd(sp, 4, eps=1e-12, max_iters=1500,
+                          block_rows=128)[:3]
     dt = time.time() - t0
     err = float(np.max(np.abs(S - sd) / sd))
     orth = float(np.abs(V.T @ V - np.eye(4)).max())

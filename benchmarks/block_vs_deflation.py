@@ -15,32 +15,18 @@ applied to the paper's streamed/tiled data movement).  Two measurements:
   "block") at their converged accuracy on the same spectrum.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run --only block_vs_deflation``
+     ``PYTHONPATH=src python benchmarks/block_vs_deflation.py --smoke``
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HostBlockedMatrix, oom_tsvd, tsvd
-
-
-class CountingMatrix(HostBlockedMatrix):
-    """Counts host-block fetches; fetches / n_blocks = passes over A."""
-
-    def __init__(self, A_host, n_blocks):
-        super().__init__(A_host, n_blocks)
-        self.fetches = 0
-
-    def block(self, b):
-        self.fetches += 1
-        return super().block(b)
-
-    @property
-    def passes(self) -> float:
-        return self.fetches / self.n_blocks
+from repro.core import CountingHostMatrix, oom_tsvd, tsvd
 
 
 def _lowrank(rng, m, n, spectrum):
@@ -51,32 +37,40 @@ def _lowrank(rng, m, n, spectrum):
     return (U * s) @ Vt
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, smoke: bool = False):
     rng = np.random.default_rng(0)
-    m, n, k = (512, 256, 64) if fast else (2048, 512, 128)
+    if smoke:
+        m, n, k = 128, 64, 8
+    else:
+        m, n, k = (512, 256, 64) if fast else (2048, 512, 128)
     defl_cap = 3 if fast else 10     # deflation iteration cap per rank
     A = _lowrank(rng, m, n, np.linspace(10, 1, k))
     s_np = np.linalg.svd(A, compute_uv=False)[:k]
 
     print(f"\n== block vs deflation ({m}x{n}, rank {k}) ==")
     print("-- passes over A (streamed degree-1 operator, n_blocks=2) --")
-    print(f"{'method':>12} {'passes':>8} {'max rel sigma err':>18} "
-          f"{'wall_s':>8}")
+    print(f"{'method':>12} {'passes':>8} {'reported':>9} "
+          f"{'max rel sigma err':>18} {'wall_s':>8}")
     results = {}
     for method, iters in (("block", 100), ("gramfree", defl_cap)):
-        op = CountingMatrix(A, 2)
+        op = CountingHostMatrix(A, 2)
         t0 = time.time()
         res = oom_tsvd(None, k, op=op, method=method, eps=1e-6,
                        max_iters=iters)
         wall = time.time() - t0
         err = float(np.max(np.abs(np.asarray(res.S) - s_np) / s_np))
         results[method] = op.passes
+        # the analytic pass accounting must agree with the instrumented op
+        assert res.passes_over_A == op.passes, (
+            f"{method}: reported {res.passes_over_A} != counted {op.passes}")
         note = "" if method == "block" else f"  (capped at {iters} it/rank)"
-        print(f"{method:>12} {op.passes:>8.0f} {err:>18.2e} "
-              f"{wall:>8.2f}{note}")
+        print(f"{method:>12} {op.passes:>8.0f} {res.passes_over_A:>9d} "
+              f"{err:>18.2e} {wall:>8.2f}{note}")
     ratio = results["gramfree"] / results["block"]
     print(f"pass ratio (deflation/block): {ratio:.0f}x "
           f"(acceptance floor: 5x)")
+    if smoke:
+        return
 
     print("-- wall-clock, jit'd serial paths to convergence --")
     print(f"{'method':>12} {'wall_s':>8} {'recon err':>12} "
@@ -98,4 +92,9 @@ def run(fast: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI import/run check")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)

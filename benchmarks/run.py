@@ -6,6 +6,8 @@
   oom_batching       — paper Fig 4  (peak memory & time vs n_b, q_s)
   block_vs_deflation — passes-over-A + wall-clock: block subspace
                        iteration vs rank-one deflation
+  warmstart          — range-finder warm start: iterations-to-convergence
+                       cold vs warmup_q=1, all four paths
   roofline           — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]``
@@ -27,13 +29,15 @@ def main():
     args = ap.parse_args()
 
     from benchmarks import (accuracy, block_vs_deflation, oom_batching,
-                            roofline, scaling_dense, scaling_sparse)
+                            roofline, scaling_dense, scaling_sparse,
+                            warmstart)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
         "scaling_sparse": scaling_sparse.run,
         "oom_batching": oom_batching.run,
         "block_vs_deflation": block_vs_deflation.run,
+        "warmstart": warmstart.run,
         "roofline": roofline.run,
     }
     results = {}

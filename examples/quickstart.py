@@ -43,7 +43,18 @@ def main():
     res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method="block",
                eps=1e-8, max_iters=300)
     print("[serial/block]  sigma:", np.round(np.asarray(res.S), 3),
-          f"({int(res.iters[0])} block iterations)")
+          f"({int(res.iters[0])} block iterations, "
+          f"{int(res.passes_over_A)} passes over A)")
+
+    # 3b) ... with the randomized range-finder warm start: the sketch
+    #     orth((A^T A) A^T Omega) replaces iterations — a few here (this
+    #     demo spectrum is nearly flat), 6-30x on spectra with a decaying
+    #     tail (see benchmarks/warmstart.py)
+    res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method="block",
+               eps=1e-8, max_iters=300, warmup_q=1)
+    print("[block+warm]    sigma:", np.round(np.asarray(res.S), 3),
+          f"({int(res.iters[0])} block iterations, "
+          f"{int(res.passes_over_A)} passes over A)")
 
     # 4) out-of-core: A stays on host, streamed in 8 blocks (degree-1 OOM)
     res = oom_tsvd(A, k, n_blocks=8, eps=1e-9, max_iters=500)

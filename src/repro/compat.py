@@ -46,7 +46,29 @@ except AttributeError:  # 0.4.x: experimental module, auto= complement API
 SUPPORTS_PARTIAL_MANUAL = hasattr(jax, "shard_map")
 
 try:
-    pvary = jax.lax.pvary
+    _pvary_raw = jax.lax.pvary
+
+    def pvary(x, axis_name):
+        """``jax.lax.pvary`` that tolerates already-varying leaves.
+
+        Warm-started block iterates are built from psum outputs, so parts
+        of a while_loop carry can already vary over the mesh axes; the raw
+        ``pvary`` rejects that.  Per leaf, only the axes missing from the
+        aval's vma set are added (leaves without vma typing fall through
+        to the raw call, preserving the original behaviour).
+        """
+        axes = tuple(axis_name) if isinstance(axis_name, (tuple, list)) \
+            else (axis_name,)
+
+        def _one(v):
+            vma = getattr(getattr(v, "aval", None), "vma", None)
+            if vma is None:
+                return _pvary_raw(v, axes)
+            missing = tuple(a for a in axes if a not in vma)
+            return _pvary_raw(v, missing) if missing else v
+
+        return jax.tree_util.tree_map(_one, x)
+
 except AttributeError:  # pre-vma jax: values are not vma-typed; no-op
     def pvary(x, axis_name):  # noqa: ARG001
         return x

@@ -6,15 +6,19 @@ from repro.core.tsvd import (  # noqa: F401
     power_iterate_gram,
     power_iterate_chain,
     block_power_iterate,
+    range_finder_q0,
+    warm_start_width,
     rayleigh_ritz,
     reconstruct,
     relative_error,
 )
 from repro.core.dist_svd import DistTSVDResult, dist_tsvd  # noqa: F401
 from repro.core.oom import (  # noqa: F401
+    OOMResult,
     blocked_gram,
     tiled_gram,
     blocked_deflated_matvec,
+    CountingHostMatrix,
     HostBlockedMatrix,
     oom_tsvd,
 )
@@ -25,4 +29,9 @@ from repro.core.partition import (  # noqa: F401
     make_batch_plan,
     symmetric_tasks,
 )
-from repro.core.sparse import SyntheticSparseMatrix, sparse_tsvd  # noqa: F401
+from repro.core.sparse import (  # noqa: F401
+    DenseStreamOperator,
+    SparseTSVDResult,
+    SyntheticSparseMatrix,
+    sparse_tsvd,
+)

@@ -30,6 +30,15 @@ and ONE ``psum`` of the ``(n, k)`` payload per step advances all k ranks
 (deflation issues one or three collectives per step *per rank*).  The
 triplet is extracted by Rayleigh–Ritz through the psum'd ``(k, k)`` Gram
 of ``W = A Q``, so no distributed QR of a tall matrix is ever needed.
+
+``warmup_q >= 1`` (block only) builds a randomized range-finder warm
+start ``Q0 = orth((A^T A)^q A^T Omega)`` from the SAME fused ``(n, l)``
+psum the block step uses (``l = k + oversample``; each shard sketches its
+own row block of ``Omega``), so well-separated spectra converge in 1-2
+subspace sweeps instead of ~10-15.  All methods report
+``passes_over_A`` with the same accounting as ``repro.core.tsvd``
+(see ``_PASS_ACCOUNTING`` there): the faithful chain costs 3 A-sweeps
+per power step, the fused chain 2, the block step 2 per sweep.
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ from repro.compat import all_gather_inv as _all_gather_inv
 from repro.compat import pvary as _pvary
 from repro.compat import shard_map as _shard_map
 from repro.core.tsvd import block_power_iterate as _block_power_iterate
+from repro.core.tsvd import warm_start_width as _warm_start_width
 
 
 class DistTSVDResult(NamedTuple):
@@ -52,6 +62,7 @@ class DistTSVDResult(NamedTuple):
     S: jax.Array        # (k,)   replicated
     V: jax.Array        # (n, k) replicated
     iters: jax.Array    # (k,)
+    passes_over_A: jax.Array  # () A-sized operand sweeps (int32)
 
 
 def _norm(x):
@@ -170,6 +181,8 @@ def dist_tsvd(
     max_iters: int = 200,
     force_iters: bool = False,
     seed: int = 0,
+    warmup_q: int = 0,              # block only: range-finder warm start
+    oversample: int = 8,            # block only: extra sketch columns
 ) -> DistTSVDResult:
     """Distributed t-SVD of ``A`` row-sharded over ``axes`` of ``mesh``.
 
@@ -185,6 +198,9 @@ def dist_tsvd(
         # step is one fused matmat — in-shard batching is not implemented
         raise ValueError("method='block' supports neither faithful=True "
                          "nor n_blocks > 1")
+    if warmup_q and method != "block":
+        raise ValueError("warmup_q > 0 requires method='block' "
+                         "(deflation has no block iterate to warm-start)")
     m, n = A.shape
     transposed = m < n
     if transposed:
@@ -204,7 +220,7 @@ def dist_tsvd(
         _shard_map,
         mesh=mesh,
         in_specs=(row_spec, P(None)),
-        out_specs=(row_spec, P(None), P(None, None), P(None)),
+        out_specs=(row_spec, P(None), P(None, None), P(None), P(None)),
     )
     def run(A_loc, seed_arr):
         key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr[0])
@@ -212,8 +228,27 @@ def dist_tsvd(
         A32 = A_loc.astype(jnp.float32)
 
         if method == "block":
-            Q0 = jnp.linalg.qr(
-                jax.random.normal(key, (n, k), jnp.float32))[0]
+            if warmup_q > 0:
+                # Range-finder warm start from the same fused (n, l) psum
+                # as the block step: each shard sketches its own row block
+                # of Omega (fold the flat shard index into the key).
+                l = _warm_start_width(k, oversample, n)
+                idx = jnp.int32(0)
+                for a in axes:
+                    idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+                okey = jax.random.fold_in(jax.random.fold_in(key, 1), idx)
+                Om = jax.random.normal(okey, (m_loc, l), jnp.float32)
+                Y = jax.lax.psum(A32.T @ Om, axes)     # sketch: ONE psum
+                Y = jnp.linalg.qr(Y)[0]
+                for _ in range(warmup_q):              # q refinements
+                    Y = jnp.linalg.qr(
+                        jax.lax.psum(A32.T @ (A32 @ Y), axes))[0]
+                Q0 = Y
+                warm_passes = 1 + 2 * warmup_q
+            else:
+                Q0 = jnp.linalg.qr(
+                    jax.random.normal(key, (n, k), jnp.float32))[0]
+                warm_passes = 0
 
             def matmat(Q):
                 # ONE fused (n, k) psum per step advances all k ranks;
@@ -225,8 +260,8 @@ def dist_tsvd(
                 force_iters=force_iters, axes=axes)
             # Rayleigh–Ritz through the psum'd (k, k) Gram of W = A Q —
             # no distributed QR of the tall factor is needed.
-            W_loc = A32 @ Q                            # (m_loc, k) sharded
-            G = jax.lax.psum(W_loc.T @ W_loc, axes)    # (k, k) replicated
+            W_loc = A32 @ Q                            # (m_loc, l) sharded
+            G = jax.lax.psum(W_loc.T @ W_loc, axes)    # (l, l) replicated
             lam, P_g = jnp.linalg.eigh(G)              # ascending order
             lam, P_g = lam[::-1], P_g[:, ::-1]
             S = jnp.sqrt(jnp.clip(lam, 0.0))
@@ -236,7 +271,10 @@ def dist_tsvd(
             inv = jnp.where(S > 1e-6 * S[0], 1.0 / (S + 1e-30), 0.0)
             U_blk = (W_loc @ P_g) * inv[None, :]
             V_blk = Q @ P_g
-            return U_blk, S, V_blk, jnp.full((k,), iters, jnp.int32)
+            passes = warm_passes + 1 + 2 * iters.astype(jnp.int32)
+            return (U_blk[:, :k], S[:k], V_blk[:, :k],
+                    jnp.full((k,), iters, jnp.int32),
+                    jnp.reshape(passes, (1,)))
 
         U_loc = _pvary(jnp.zeros((m_loc, k), jnp.float32), axes)
         S = jnp.zeros((k,), jnp.float32)
@@ -289,13 +327,24 @@ def dist_tsvd(
 
         U_loc, S, V, iters_out = jax.lax.fori_loop(
             0, k, rank_step, (U_loc, S, V, iters_out))
-        return U_loc, S, V, iters_out
+        if method == "gram":
+            # Gram path: residual + Gram + u recovery per rank; the power
+            # loop itself runs on the small replicated/sharded B.
+            passes = jnp.asarray(3 * k, jnp.int32)
+        else:
+            # chain: 3 A-sweeps/step faithful, 2 fused; + u recovery/rank.
+            per_step = 3 if faithful else 2
+            passes = (per_step * jnp.sum(iters_out) + k).astype(jnp.int32)
+        return U_loc, S, V, iters_out, jnp.reshape(passes, (1,))
 
     A_sharded = jax.device_put(A, NamedSharding(mesh, row_spec))
-    U, S, V, iters = jax.jit(run)(A_sharded, jnp.array([seed], jnp.uint32))
+    U, S, V, iters, passes = jax.jit(run)(
+        A_sharded, jnp.array([seed], jnp.uint32))
+    passes = passes[0]
     if transposed:
-        return DistTSVDResult(U=V, S=S, V=U, iters=iters)
-    return DistTSVDResult(U=U, S=S, V=V, iters=iters)
+        return DistTSVDResult(U=V, S=S, V=U, iters=iters,
+                              passes_over_A=passes)
+    return DistTSVDResult(U=U, S=S, V=V, iters=iters, passes_over_A=passes)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,19 @@ cost at degree-1 scale, so "passes over A" is the unit that matters):
   iteration streams every host block ONCE against all k vectors via the
   fused ``A_b^T (A_b Q)`` chain — k× less H2D traffic per extracted rank,
   ``iters + 2`` passes total.  Preferred whenever k > a few.
+
+``warmup_q >= 1`` (block only) prepends the randomized range-finder warm
+start: one streamed sketch pass ``A^T Omega`` (``Omega`` row blocks are
+generated on the fly, never resident) plus ``q`` fused ``gram_chain``
+refinement passes, turning ~10-15 cold subspace iterations into 1-2 for
+spectra with a decaying tail.
+
+Both strategies report ``iters`` and ``passes_over_A`` in ``OOMResult``.
+A pass is ONE full H2D stream of the host blocks (the fused chain
+generates/copies each block once), so block costs
+``[1 + q if warm] + iters + 1`` and deflation ``sum_l (2 iters_l + 1)``
+— exactly what an instrumented ``HostBlockedMatrix`` counts (asserted in
+the tests).
 """
 from __future__ import annotations
 
@@ -221,6 +234,28 @@ class HostBlockedMatrix:
         return acc
 
 
+class CountingHostMatrix(HostBlockedMatrix):
+    """Instrumented ``HostBlockedMatrix``: counts host-block fetches.
+
+    ``fetches / n_blocks`` is the number of full passes over ``A`` the
+    driver actually streamed — the ground truth the analytic
+    ``passes_over_A`` accounting is asserted against in the tests and in
+    ``benchmarks/block_vs_deflation.py``.
+    """
+
+    def __init__(self, A_host, n_blocks):
+        super().__init__(A_host, n_blocks)
+        self.fetches = 0
+
+    def block(self, b):
+        self.fetches += 1
+        return super().block(b)
+
+    @property
+    def passes(self) -> float:
+        return self.fetches / self.n_blocks
+
+
 # ---------------------------------------------------------------------------
 # Full OOM t-SVD driver (blocked operator, single device)
 # ---------------------------------------------------------------------------
@@ -229,30 +264,66 @@ class OOMResult(NamedTuple):
     U: jax.Array
     S: jax.Array
     V: jax.Array
+    iters: jax.Array          # (k,) iterations per rank (shared for block)
+    passes_over_A: int        # full H2D streams of the host blocks
 
 
 def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
-                    seed) -> OOMResult:
+                    seed, warmup_q, oversample) -> OOMResult:
     """Block subspace iteration on a streamed host-resident operator.
 
     Each iteration makes exactly ONE pass over the host blocks (the fused
     ``A_b^T (A_b Q)`` chain); extraction adds one more pass for
-    ``W = A Q`` plus small on-device QR/SVD factorizations.
+    ``W = A Q`` plus small on-device QR/SVD factorizations.  The warm
+    start adds one streamed sketch pass + one fused pass per refinement.
     """
     n = op.n
     key = jax.random.PRNGKey(seed)
-    Q = jnp.linalg.qr(jax.random.normal(key, (n, k), jnp.float32))[0]
     qr = jax.jit(jnp.linalg.qr)
-    for _ in range(max_iters):
+    if warmup_q > 0:
+        from repro.core.tsvd import warm_start_width
+        l = warm_start_width(k, oversample, n)
+        okey = jax.random.fold_in(key, 1)
+        acc = jnp.zeros((n, l), jnp.float32)
+        step = jax.jit(lambda acc, blk, om: acc + blk.T @ om)
+        nxt = op.block(0)
+        for b in range(op.n_blocks):       # sketch A^T Omega: one pass,
+            cur = nxt                      # Omega blocks never resident
+            if b + 1 < op.n_blocks:        # prefetch next block (async H2D)
+                nxt = op.block(b + 1)
+            om_b = jax.random.normal(jax.random.fold_in(okey, b),
+                                     (cur.shape[0], l), jnp.float32)
+            acc = step(acc, cur, om_b)
+        Q = qr(acc)[0]
+        for _ in range(warmup_q):          # q fused refinement passes
+            Q = qr(op.gram_chain(Q))[0]
+        passes = 1 + warmup_q
+    else:
+        Q = jnp.linalg.qr(jax.random.normal(key, (n, k), jnp.float32))[0]
+        passes = 0
+    l_eff = Q.shape[1]
+    it = 0
+    for it in range(1, max_iters + 1):
         Qn, _ = qr(op.gram_chain(Q))       # one pass over A
+        passes += 1
         # rotation-invariant subspace test (see tsvd.block_power_iterate)
         ssc = float(jnp.sum((Q.T @ Qn) ** 2))
         Q = Qn
-        if (k - ssc) <= eps * k:
+        if (l_eff - ssc) <= eps * l_eff:
             break
     W = op.matmat(Q)                       # one more pass over A
+    passes += 1
     U, S, V = rayleigh_ritz_from_W(W, Q)
-    return OOMResult(U=U, S=S, V=V)
+    return OOMResult(U=U[:, :k], S=S[:k], V=V[:, :k],
+                     iters=jnp.full((k,), it, jnp.int32),
+                     passes_over_A=passes)
+
+
+# How often the deflation inner loop fetches the device-side convergence
+# flag.  ``bool(done)`` forces a host sync, stalling the async-dispatch
+# prefetch pipeline; checking every few steps keeps dispatch running ahead
+# at the cost of at most CHECK_EVERY - 1 extra (cheap) iterations.
+CONVERGENCE_CHECK_EVERY = 4
 
 
 def oom_tsvd(
@@ -265,14 +336,16 @@ def oom_tsvd(
     seed: int = 0,
     method: str = "gramfree",   # "gramfree" | "block"
     op: HostBlockedMatrix | None = None,
+    warmup_q: int = 0,          # block only: range-finder warm start
+    oversample: int = 8,        # block only: extra sketch columns
 ) -> OOMResult:
     """Degree-1 OOM truncated SVD: ``A`` stays on host, blocks streamed.
 
     ``method="gramfree"`` runs Alg-4 rank-one deflation; ``method="block"``
     runs block subspace iteration, streaming each host block once per
     iteration against all k vectors (see module docstring for the
-    pass/memory trade-off).  Both keep device memory at
-    ``O(block + m*k + n*k)`` regardless of ``m*n``.
+    pass/memory trade-off and for ``warmup_q``/``oversample``).  Both keep
+    device memory at ``O(block + m*k + n*k)`` regardless of ``m*n``.
     Assumes the RSVD (tall) orientation; wide inputs are transposed in and
     the factors swapped out.  ``op`` injects a pre-built (possibly
     instrumented) ``HostBlockedMatrix`` — it must already be in the tall
@@ -281,6 +354,9 @@ def oom_tsvd(
     if method not in ("gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
                          "expected 'gramfree' | 'block'")
+    if warmup_q and method != "block":
+        raise ValueError("warmup_q > 0 requires method='block' "
+                         "(deflation has no block iterate to warm-start)")
     if op is not None:
         transposed = False
         m, n = op.m, op.n
@@ -294,9 +370,11 @@ def oom_tsvd(
 
     if method == "block":
         res = _oom_block_tsvd(op, k, eps=eps, max_iters=max_iters,
-                              seed=seed)
+                              seed=seed, warmup_q=warmup_q,
+                              oversample=oversample)
         if transposed:
-            return OOMResult(U=res.V, S=res.S, V=res.U)
+            return OOMResult(U=res.V, S=res.S, V=res.U, iters=res.iters,
+                             passes_over_A=res.passes_over_A)
         return res
 
     key = jax.random.PRNGKey(seed)
@@ -306,6 +384,8 @@ def oom_tsvd(
     U = jnp.zeros((m, k), jnp.float32)
     S = jnp.zeros((k,), jnp.float32)
     V = jnp.zeros((n, k), jnp.float32)
+    iters_out = np.zeros((k,), np.int32)
+    passes = 0
 
     norm = lambda x: jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2))
 
@@ -313,7 +393,8 @@ def oom_tsvd(
         key, sub = jax.random.split(key)
         v = jax.random.normal(sub, (n,), jnp.float32)
         v = v / norm(v)
-        for _ in range(max_iters):
+        it = 0
+        for it in range(1, max_iters + 1):
             # One fused Alg-4 sweep over host-resident blocks.
             Vtv = V.T @ v
             SVtv = S * Vtv
@@ -330,8 +411,13 @@ def oom_tsvd(
             v1 = v1 / (norm(v1) + 1e-30)
             done = jnp.abs(jnp.vdot(v, v1)) >= 1.0 - eps
             v = v1
-            if bool(done):
-                break
+            # Fetch `done` on-host only every few steps: each bool() is a
+            # device sync that would stall the H2D prefetch pipeline.
+            if it % CONVERGENCE_CHECK_EVERY == 0 or it == max_iters:
+                if bool(done):
+                    break
+        iters_out[l] = it
+        passes += 2 * it + 1       # 2 streams per power step + u recovery
         # u = (A - U S V^T) v, streamed.
         SVtv = S * (V.T @ v)
         u_parts = []
@@ -344,6 +430,7 @@ def oom_tsvd(
         S = S.at[l].set(sigma)
         V = V.at[:, l].set(v)
 
+    iters = jnp.asarray(iters_out)
     if transposed:
-        return OOMResult(U=V, S=S, V=U)
-    return OOMResult(U=U, S=S, V=V)
+        return OOMResult(U=V, S=S, V=U, iters=iters, passes_over_A=passes)
+    return OOMResult(U=U, S=S, V=V, iters=iters, passes_over_A=passes)

@@ -18,6 +18,7 @@ dense benchmarks when a block is small enough to densify for testing.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import numpy as np
 
@@ -66,7 +67,12 @@ class SyntheticSparseMatrix:
         Assembled from fixed canonical chunks so the matrix is identical
         no matter how callers block it (blocking-invariance is a tested
         invariant — the paper's batching must not change the operator).
+        An empty range (``hi <= lo`` — e.g. the trailing block of a plan
+        that over-covers ``m``) yields three empty arrays.
         """
+        if hi <= lo:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.float32))
         parts = []
         c0, c1 = lo // self.chunk, (hi - 1) // self.chunk
         for c in range(c0, c1 + 1):
@@ -128,6 +134,23 @@ class SyntheticSparseMatrix:
             np.add.at(out, cols, vals[:, None] * Y[rows])
         return out
 
+    def range_sketch(self, l: int, seed: int = 0,
+                     block_rows: int = 1 << 16) -> np.ndarray:
+        """``A^T Omega`` with ``Omega ~ N(0,1)^(m x l)`` generated per row
+        block on the fly — the randomized range-finder sketch riding the
+        same procedural stream as the mat-vecs.  ONE pass over the
+        nonzeros, O(n*l) memory; the (m, l) ``Omega`` never exists.
+        """
+        out = np.zeros((self.n, l), np.float32)
+        for bi, lo in enumerate(range(0, self.m, block_rows)):
+            hi = min(lo + block_rows, self.m)
+            rows, cols, vals = self.row_block_coo(lo, hi)
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, seed, bi]))
+            om = rng.standard_normal((hi - lo, l)).astype(np.float32)
+            np.add.at(out, cols, vals[:, None] * om[rows - lo])
+        return out
+
     def gram_chain(self, Q: np.ndarray,
                    block_rows: int = 1 << 16) -> np.ndarray:
         """``A^T (A Q)`` — the Eq. 2 chain on a k-wide block, fused.
@@ -148,27 +171,95 @@ class SyntheticSparseMatrix:
         return out
 
 
-def _sparse_block_tsvd(A, k, *, eps, max_iters, seed, block_rows):
+@dataclasses.dataclass
+class DenseStreamOperator:
+    """A dense array behind the streamed-operator interface.
+
+    Exposes the same ``matvec``/``rmatvec``/``matmat``/``gram_chain``/
+    ``range_sketch`` surface as ``SyntheticSparseMatrix`` so
+    ``sparse_tsvd`` (and its warm start) can run on a matrix with a
+    *prescribed* spectrum — used by the warm-start benchmark/tests, where
+    the procedural sparse operator's spectrum can't be controlled.
+    ``block_rows`` is accepted and ignored (no streaming needed).
+    """
+
+    A: np.ndarray
+
+    def __post_init__(self):
+        self.A = np.asarray(self.A, np.float32)
+        self.m, self.n = self.A.shape
+
+    def matvec(self, v, block_rows: int = 0):
+        return self.A @ v
+
+    def rmatvec(self, u, block_rows: int = 0):
+        return self.A.T @ u
+
+    def matmat(self, Q, block_rows: int = 0):
+        return self.A @ Q
+
+    def rmatmat(self, Y, block_rows: int = 0):
+        return self.A.T @ Y
+
+    def gram_chain(self, Q, block_rows: int = 0):
+        return self.A.T @ (self.A @ Q)
+
+    def range_sketch(self, l, seed: int = 0, block_rows: int = 0):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, l]))
+        return self.A.T @ rng.standard_normal((self.m, l)).astype(np.float32)
+
+
+class SparseTSVDResult(NamedTuple):
+    """Sparse t-SVD result with the uniform pass accounting."""
+
+    U: np.ndarray
+    S: np.ndarray
+    V: np.ndarray
+    iters: np.ndarray         # (k,) iterations per rank (shared for block)
+    passes_over_A: int        # full streams of the nonzeros
+
+
+def _sparse_block_tsvd(A, k, *, eps, max_iters, seed, block_rows,
+                       warmup_q, oversample):
     """Block subspace iteration on the streamed sparse operator.
 
-    Each iteration streams the nonzeros twice (forward + reverse sweep of
-    the chain) and advances all k ranks; deflation streams twice per step
-    *per rank*.  Extraction is Rayleigh–Ritz on the skinny ``W = A Q``.
+    Each iteration streams the nonzeros ONCE (the fused ``gram_chain``)
+    and advances all k ranks; deflation streams twice per step *per
+    rank*.  Extraction is Rayleigh–Ritz on the skinny ``W = A Q``.  The
+    warm start costs one sketch stream + one fused stream per refinement.
     """
-    rng = np.random.default_rng(seed)
-    Q, _ = np.linalg.qr(
-        rng.standard_normal((A.n, k)).astype(np.float32))
-    for _ in range(max_iters):
+    from repro.core.tsvd import rayleigh_ritz_from_W, warm_start_width
+
+    if warmup_q > 0:
+        l = warm_start_width(k, oversample, A.n)
+        Y = A.range_sketch(l, seed=seed, block_rows=block_rows)  # 1 pass
+        Q, _ = np.linalg.qr(Y)
+        for _ in range(warmup_q):                 # q fused refinements
+            Q, _ = np.linalg.qr(A.gram_chain(Q, block_rows))
+        Q = Q.astype(np.float32)
+        passes = 1 + warmup_q
+    else:
+        rng = np.random.default_rng(seed)
+        Q, _ = np.linalg.qr(
+            rng.standard_normal((A.n, k)).astype(np.float32))
+        passes = 0
+    l_eff = Q.shape[1]
+    it = 0
+    for it in range(1, max_iters + 1):
         Qn, _ = np.linalg.qr(A.gram_chain(Q, block_rows))
+        passes += 1
         # rotation-invariant subspace test (see tsvd.block_power_iterate)
         ssc = float(np.sum((Q.T @ Qn) ** 2))
         Q = Qn.astype(np.float32)
-        if (k - ssc) <= eps * k:
+        if (l_eff - ssc) <= eps * l_eff:
             break
     W = A.matmat(Q, block_rows)
-    from repro.core.tsvd import rayleigh_ritz_from_W
+    passes += 1
     U, S, V = rayleigh_ritz_from_W(W, Q)
-    return np.asarray(U), np.asarray(S), np.asarray(V)
+    return SparseTSVDResult(
+        U=np.asarray(U)[:, :k], S=np.asarray(S)[:k],
+        V=np.asarray(V)[:, :k],
+        iters=np.full((k,), it, np.int32), passes_over_A=passes)
 
 
 def sparse_tsvd(
@@ -180,7 +271,9 @@ def sparse_tsvd(
     seed: int = 0,
     block_rows: int = 1 << 16,
     method: str = "gramfree",   # "gramfree" | "block"
-):
+    warmup_q: int = 0,          # block only: range-finder warm start
+    oversample: int = 8,        # block only: extra sketch columns
+) -> SparseTSVDResult:
     """Gram-free t-SVD on the streamed sparse operator (Alg 1+4 semantics).
 
     Host-side oracle used by the sparse-scaling benchmark; the distributed
@@ -188,24 +281,35 @@ def sparse_tsvd(
     via ``dist_svd`` on densified blocks (tests cross-check the two).
     Memory: O(m*k + n*k + nnz_block) — the dense residual never exists.
     ``method="block"`` swaps deflation for block subspace iteration on the
-    same streamed operator (multi-vector chain; see ``_sparse_block_tsvd``).
+    same streamed operator (multi-vector chain; see ``_sparse_block_tsvd``),
+    optionally warm-started via ``warmup_q``/``oversample``.  The result
+    reports ``iters`` and ``passes_over_A`` (full streams of the
+    nonzeros): block costs ``[1 + q if warm] + iters + 1``, deflation
+    ``sum_l (2 iters_l + 1)``.
     """
     if method not in ("gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
                          "expected 'gramfree' | 'block'")
+    if warmup_q and method != "block":
+        raise ValueError("warmup_q > 0 requires method='block' "
+                         "(deflation has no block iterate to warm-start)")
     if method == "block":
         return _sparse_block_tsvd(A, k, eps=eps, max_iters=max_iters,
-                                  seed=seed, block_rows=block_rows)
+                                  seed=seed, block_rows=block_rows,
+                                  warmup_q=warmup_q, oversample=oversample)
     rng = np.random.default_rng(seed)
     m, n = A.m, A.n
     U = np.zeros((m, k), np.float32)
     S = np.zeros((k,), np.float32)
     V = np.zeros((n, k), np.float32)
+    iters_out = np.zeros((k,), np.int32)
+    passes = 0
 
     for l in range(k):
         v = rng.standard_normal(n).astype(np.float32)
         v /= np.linalg.norm(v)
-        for _ in range(max_iters):
+        it = 0
+        for it in range(1, max_iters + 1):
             # Deflated X = A - U S V^T applied twice, each as a streamed
             # sparse op + skinny correction (equivalent regrouping of the
             # paper's Eq. 2 four-term chain; see tests for the equivalence).
@@ -217,10 +321,13 @@ def sparse_tsvd(
             v = v1
             if done:
                 break
+        iters_out[l] = it
+        passes += 2 * it + 1     # 2 streams per power step + u recovery
         SVtv = S * (V.T @ v)
         u = A.matvec(v, block_rows) - U @ SVtv
         sigma = np.linalg.norm(u)
         U[:, l] = u / (sigma + 1e-30)
         S[l] = sigma
         V[:, l] = v
-    return U, S, V
+    return SparseTSVDResult(U=U, S=S, V=V, iters=iters_out,
+                            passes_over_A=passes)

@@ -25,6 +25,28 @@ Three factorization strategies are provided:
                   the dominant data-movement term — at the price of
                   ``O((m + n) k)`` extra working memory for the block.
 
+The block method additionally supports a **randomized range-finder warm
+start** (Halko et al.; cf. Demchik et al., arXiv:1907.06470): instead of
+a random orthonormal ``Q0``, pass ``warmup_q=q >= 1`` to initialize with
+
+    ``Q0 = orth((A^T A)^q  A^T Omega)``,   ``Omega ~ N(0, 1)^(m x l)``
+
+where ``l = k + oversample`` (clamped to ``min(m, n)``).  The sketch
+``A^T Omega`` costs one extra pass over ``A`` and each of the ``q``
+power refinements two more, but for spectra with a decaying tail it
+replaces ~10-15 cold subspace iterations with 1-2 — the oversampled
+``l``-wide iterate converges at rate ``(sigma_{l+1}/sigma_k)^2`` per
+sweep instead of the cold ``(sigma_{k+1}/sigma_k)^2``.  The extra
+``oversample`` columns ride through the iteration and are truncated at
+the Rayleigh–Ritz extraction.  ``warmup_q=0`` (default) keeps the cold
+random start.
+
+Every strategy reports uniform **pass accounting**: the result tuple
+carries ``iters`` (power/subspace iterations actually run) and
+``passes_over_A`` (A-sized operand sweeps — the paper's dominant
+data-movement unit; see ``_PASS_ACCOUNTING`` below for the per-method
+formulas).
+
 Deflation (``gram``/``gramfree``) stays the default and the numerical
 oracle; the property tests assert that all strategies agree with
 ``numpy.linalg.svd`` and with each other to tolerance.
@@ -45,6 +67,25 @@ class TSVDResult(NamedTuple):
     S: jax.Array  # (k,)
     V: jax.Array  # (n, k)
     iters: jax.Array  # (k,) power-method iterations actually used per rank
+    passes_over_A: jax.Array  # () total A-sized operand sweeps (int32)
+
+
+# _PASS_ACCOUNTING — the per-method formulas behind ``passes_over_A``.
+# A "pass" is one A-sized operand sweep (one read of A, or of the equally
+# sized residual X) — the unit the paper's H2D/collective cost scales with.
+#
+#   gram      3 per rank: residual build + Gram product + u recovery
+#             (the power loop itself runs on the small (n, n) B).
+#   gramfree  3 per power step (A v, A^T X v, A^T U S V^T v) + 1 per rank
+#             for u recovery:  3 * sum_l iters_l + k.
+#   block     2 per subspace sweep (A Q, A^T Y) + 1 for Rayleigh–Ritz,
+#             plus the warm start's 1 (sketch) + 2q (refinements):
+#             [1 + 2q if warm] + 2 * iters + 1.
+#
+# The streamed backends (``oom_tsvd``/``sparse_tsvd``) fuse the two block
+# sweeps into ONE stream of the data, so their block formula is
+# [1 + q] + iters + 1 — documented there and cross-checked against an
+# instrumented operator in the tests.
 
 
 def _l2norm(x: jax.Array) -> jax.Array:
@@ -240,25 +281,58 @@ def rayleigh_ritz(X: jax.Array, Q: jax.Array):
     return rayleigh_ritz_from_W(X @ Q, Q)      # (M, k) one pass over X
 
 
-def _block_tsvd(A, k, key, *, eps, max_iters, force_iters):
+def warm_start_width(k: int, oversample: int, N: int) -> int:
+    """Oversampled iterate width ``l = min(k + p, N)`` (shared by all paths)."""
+    return min(k + max(oversample, 0), N)
+
+
+def range_finder_q0(X: jax.Array, k: int, key: jax.Array, *,
+                    warmup_q: int, oversample: int) -> jax.Array:
+    """Randomized range-finder start ``Q0 = orth((X^T X)^q X^T Omega)``.
+
+    ``X`` is the tall ``(M, N)`` operand.  QR re-orthonormalizes between
+    refinements (numerically identical subspace to the literal power of
+    the formula, but immune to ``sigma^(2q)`` dynamic-range blow-up).
+    Costs ``1 + 2 * warmup_q`` passes over ``X``.
+    """
+    M, N = X.shape
+    l = warm_start_width(k, oversample, N)
+    Om = jax.random.normal(jax.random.fold_in(key, 1), (M, l), jnp.float32)
+    Y = jnp.linalg.qr(X.T @ Om)[0]              # sketch: one pass over X
+    for _ in range(warmup_q):                   # q refinements: two passes each
+        Y = jnp.linalg.qr(X.T @ (X @ Y))[0]
+    return Y
+
+
+def _block_tsvd(A, k, key, *, eps, max_iters, force_iters, warmup_q,
+                oversample):
     """Rank-k t-SVD by block subspace iteration + Rayleigh–Ritz."""
     m, n = A.shape
     tall = m >= n
     X = A if tall else A.T                      # (M, N), M >= N
     N = X.shape[1]
-    Q0 = jnp.linalg.qr(jax.random.normal(key, (N, k), jnp.float32))[0]
+    if warmup_q > 0:
+        Q0 = range_finder_q0(X, k, key, warmup_q=warmup_q,
+                             oversample=oversample)
+        warm_passes = 1 + 2 * warmup_q
+    else:
+        Q0 = jnp.linalg.qr(jax.random.normal(key, (N, k), jnp.float32))[0]
+        warm_passes = 0
     Q, iters = block_power_iterate(
         lambda Q: X.T @ (X @ Q),                # two passes over X per step
         Q0, eps=eps, max_iters=max_iters, force_iters=force_iters)
-    U, S, V = rayleigh_ritz(X, Q)
+    U, S, V = rayleigh_ritz(X, Q)               # one more pass over X
+    U, S, V = U[:, :k], S[:k], V[:, :k]         # drop oversampled columns
     if not tall:
         U, V = V, U
-    return TSVDResult(U, S, V, jnp.full((k,), iters, jnp.int32))
+    passes = warm_passes + 1 + 2 * iters.astype(jnp.int32)
+    return TSVDResult(U, S, V, jnp.full((k,), iters, jnp.int32), passes)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "eps", "max_iters", "force_iters", "method"),
+    static_argnames=("k", "eps", "max_iters", "force_iters", "method",
+                     "warmup_q", "oversample"),
 )
 def tsvd(
     A: jax.Array,
@@ -269,6 +343,8 @@ def tsvd(
     max_iters: int = 200,
     force_iters: bool = False,
     method: str = "gram",  # "gram" | "gramfree" | "block"
+    warmup_q: int = 0,     # block only: range-finder warm start (0 = cold)
+    oversample: int = 8,   # block only: extra sketch columns p (l = k + p)
 ) -> TSVDResult:
     """Truncated SVD of ``A`` to rank ``k``.
 
@@ -279,17 +355,26 @@ def tsvd(
     subspace iteration (all k ranks advance per pass over ``A``) and
     agrees with the deflation methods to iteration tolerance; its
     ``iters`` output holds the shared block iteration count in every slot.
+
+    ``warmup_q >= 1`` (block only) initializes the iterate with the
+    randomized range finder ``orth((A^T A)^q A^T Omega)`` using
+    ``k + oversample`` sketch columns — see the module docstring.  All
+    methods report ``passes_over_A`` per ``_PASS_ACCOUNTING``.
     """
     if method not in ("gram", "gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
                          "expected 'gram' | 'gramfree' | 'block'")
+    if warmup_q and method != "block":
+        raise ValueError("warmup_q > 0 requires method='block' "
+                         "(deflation has no block iterate to warm-start)")
     if key is None:
         key = jax.random.PRNGKey(0)
     m, n = A.shape
     A = A.astype(jnp.float32)
     if method == "block":
         return _block_tsvd(A, k, key, eps=eps, max_iters=max_iters,
-                           force_iters=force_iters)
+                           force_iters=force_iters, warmup_q=warmup_q,
+                           oversample=oversample)
     tall = m >= n
 
     U = jnp.zeros((m, k), jnp.float32)
@@ -343,7 +428,11 @@ def tsvd(
         return U, S, V, iters_out
 
     U, S, V, iters_out = jax.lax.fori_loop(0, k, rank_step, (U, S, V, iters_out))
-    return TSVDResult(U, S, V, iters_out)
+    if method == "gram":
+        passes = jnp.asarray(3 * k, jnp.int32)  # residual + Gram + u, per rank
+    else:
+        passes = 3 * jnp.sum(iters_out) + k     # 3 sweeps/step + u recovery
+    return TSVDResult(U, S, V, iters_out, passes.astype(jnp.int32))
 
 
 def reconstruct(res: TSVDResult) -> jax.Array:

@@ -15,12 +15,14 @@ from repro.kernels.ops import (  # noqa: F401
     matvec,
     block_matvec,
     block_rmatvec,
+    block_gram_chain,
     deflate_rmatvec,
     local_attention,
     gram_ref,
     matvec_ref,
     block_matvec_ref,
     block_rmatvec_ref,
+    block_gram_chain_ref,
     deflate_rmatvec_ref,
     local_attention_ref,
 )

@@ -106,3 +106,23 @@ def block_rmatvec(A: jax.Array, Y: jax.Array, *, bm: int = 512,
         out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
         interpret=interpret,
     )(A, Y)
+
+
+# ---------------------------------------------------------------------------
+# Fused chain: Z = A^T (A Q) — the block power step / range-finder sweep
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def block_gram_chain(A: jax.Array, Q: jax.Array, *, bm: int = 512,
+                     bn: int = 512, interpret: bool = False) -> jax.Array:
+    """``Z = A^T (A Q)`` — one full block power sweep; A: (m, n), Q: (n, k).
+
+    Reuses the two multi-vector kernels back-to-back (each keeps its own
+    Mosaic grid pipeline over ``A``'s tiles); the only extra HBM traffic
+    beyond the two sweeps of ``A`` is the skinny fp32 ``(m, k)``
+    intermediate ``Y``, which is negligible for ``k << n``.  This is the
+    per-iteration operator of the subspace iterate AND of the randomized
+    range-finder warm start ``orth((A^T A)^q A^T Omega)``.
+    """
+    Y = block_matvec(A, Q, bm=bm, bn=bn, interpret=interpret)
+    return block_rmatvec(A, Y, bm=bm, bn=bn, interpret=interpret)

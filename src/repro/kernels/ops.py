@@ -95,6 +95,22 @@ def block_rmatvec(A, Y, *, bm: int = 512, bn: int = 512,
     return _bm.block_rmatvec(Ap, Yp, bm=bm, bn=bn, interpret=interpret)[:n]
 
 
+def block_gram_chain(A, Q, *, bm: int = 512, bn: int = 512,
+                     interpret: bool | None = None):
+    """``A^T (A Q)`` via the fused multi-vector kernel pair (padded).
+
+    Zero-padded rows/cols of ``A`` contribute nothing to either sweep, so
+    cropping the trailing ``Z`` rows back to ``n`` is exact.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    Ap = _pad_to(A, (bm, bn))
+    Qp = _pad_to(Q, (bn, 1))
+    return _bm.block_gram_chain(Ap, Qp, bm=bm, bn=bn,
+                                interpret=interpret)[:n]
+
+
 def local_attention(q, k, v, *, window: int, softcap: float | None = None,
                     bq: int = 128, bk: int = 128,
                     interpret: bool | None = None):
@@ -124,5 +140,6 @@ gram_ref = _ref.gram_ref
 matvec_ref = _ref.matvec_ref
 block_matvec_ref = _ref.block_matvec_ref
 block_rmatvec_ref = _ref.block_rmatvec_ref
+block_gram_chain_ref = _ref.block_gram_chain_ref
 deflate_rmatvec_ref = _ref.deflate_rmatvec_ref
 local_attention_ref = _ref.local_attention_ref

@@ -30,6 +30,12 @@ def block_rmatvec_ref(A: jax.Array, Y: jax.Array) -> jax.Array:
     return A.astype(jnp.float32).T @ Y.astype(jnp.float32)
 
 
+def block_gram_chain_ref(A: jax.Array, Q: jax.Array) -> jax.Array:
+    """``Z = A^T (A Q)`` in fp32 (fused block power / range-finder sweep)."""
+    A32 = A.astype(jnp.float32)
+    return A32.T @ (A32 @ Q.astype(jnp.float32))
+
+
 def deflate_rmatvec_ref(
     A: jax.Array,      # (m, n)
     U: jax.Array,      # (m, k)

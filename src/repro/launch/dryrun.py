@@ -32,9 +32,11 @@ applies to bytes-accessed and collective bytes.  Memory analysis comes
 from the FULL (scanned) lowering, which is exact.
 """
 # The VERY FIRST lines, before ANY other import: the dry-run (and only
-# the dry-run) needs 512 placeholder devices.
+# the dry-run) needs 512 placeholder devices.  Appended — never clobbered
+# — so user/CI-provided XLA_FLAGS survive (xla_flags imports no jax).
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.xla_flags import HOST_DEVICES_512, ensure_xla_flag
+ensure_xla_flag(HOST_DEVICES_512)
 
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402

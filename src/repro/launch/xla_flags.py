@@ -1,0 +1,26 @@
+"""XLA_FLAGS plumbing shared by the dry-run entry points.
+
+Deliberately imports nothing heavy: it must run before the first jax
+import (XLA parses the env var once, at backend creation).
+"""
+from __future__ import annotations
+
+import os
+
+HOST_DEVICES_512 = "--xla_force_host_platform_device_count=512"
+
+
+def with_xla_flag(existing: str | None, flag: str) -> str:
+    """Append ``flag`` to an XLA_FLAGS value, preserving what's there."""
+    if not existing:
+        return flag
+    if flag in existing.split():
+        return existing
+    return f"{existing} {flag}"
+
+
+def ensure_xla_flag(flag: str) -> None:
+    """Append — never clobber — ``flag`` into ``os.environ['XLA_FLAGS']``
+    so user/CI-provided flags survive the dry-runs' device-count setup."""
+    os.environ["XLA_FLAGS"] = with_xla_flag(os.environ.get("XLA_FLAGS"),
+                                            flag)

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import (block_matvec, block_matvec_ref, block_rmatvec,
+from repro.kernels import (block_gram_chain, block_gram_chain_ref,
+                           block_matvec, block_matvec_ref, block_rmatvec,
                            block_rmatvec_ref, deflate_rmatvec,
                            deflate_rmatvec_ref, gram, gram_ref,
                            local_attention, local_attention_ref, matvec,
@@ -63,6 +64,19 @@ def test_block_matvec_sweep(m, n, k):
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(block_rmatvec_ref(A, Y)),
                                rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,n,k", [(256, 128, 4), (300, 200, 8),
+                                   (512, 130, 16)])
+def test_block_gram_chain_sweep(m, n, k):
+    """Fused ``A^T (A Q)`` == oracle (block power / warm-start sweep)."""
+    rng = np.random.default_rng(m * 7 + n + k)
+    A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    got = block_gram_chain(A, Q, bm=128, bn=128)
+    want = block_gram_chain_ref(A, Q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=5e-2)
 
 
 def test_kernel_block_power_step_converges():

@@ -27,7 +27,8 @@ def test_blocking_invariance(block):
 def test_sparse_tsvd_matches_numpy():
     sp = SyntheticSparseMatrix(m=384, n=192, nnz_per_row=8, seed=1, chunk=64)
     Ad = sp.row_block_dense(0, 384)
-    U, S, V = sparse_tsvd(sp, 3, eps=1e-12, max_iters=2000, block_rows=100)
+    U, S, V = sparse_tsvd(sp, 3, eps=1e-12, max_iters=2000,
+                          block_rows=100)[:3]
     s_np = np.linalg.svd(Ad, compute_uv=False)[:3]
     np.testing.assert_allclose(S, s_np, rtol=5e-3)
     np.testing.assert_allclose(U.T @ U, np.eye(3), atol=1e-2)

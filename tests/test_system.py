@@ -26,7 +26,8 @@ def test_end_to_end_dense_pipeline(rng):
 def test_end_to_end_sparse_pipeline():
     """Sparse path: the Alg-4 chain on a streamed operator."""
     sp = SyntheticSparseMatrix(m=512, n=128, nnz_per_row=6, seed=2, chunk=64)
-    U, S, V = sparse_tsvd(sp, 2, eps=1e-12, max_iters=1500, block_rows=128)
+    U, S, V = sparse_tsvd(sp, 2, eps=1e-12, max_iters=1500,
+                          block_rows=128)[:3]
     Ad = sp.row_block_dense(0, 512)
     s_np = np.linalg.svd(Ad, compute_uv=False)[:2]
     np.testing.assert_allclose(S, s_np, rtol=5e-3)
