@@ -1,0 +1,156 @@
+"""Mixed-precision (bf16) block sweeps: accuracy + sweep time, fp32 vs bf16.
+
+The block iterate's hot loop is two A-sized sweeps per step; the
+``sweep_dtype`` policy (``core/precision.py``) runs them on bf16
+operands with fp32 accumulation, halving the bytes of the dominant
+HBM/H2D term.  This benchmark measures what that costs in accuracy and
+buys in sweep time, on the same separated/clustered spectra the
+warm-start benchmark owns (``benchmarks/warmstart.py``):
+
+* **accuracy** — relative reconstruction error of the rank-k factors
+  (vs the truncation floor ``||A - A_k||/||A||``, printed alongside:
+  the bf16 column should sit ON the floor, not above it) and max
+  relative sigma error, for every driver: serial ``tsvd``, ``dist_tsvd``
+  (1-device mesh), ``oom_tsvd`` (bf16-staged host blocks), and
+  ``sparse_tsvd`` on a ``DenseStreamOperator``.  The fp32 Rayleigh–Ritz
+  extraction makes sigma errors *quadratic* in the bf16 subspace
+  perturbation, so both error columns land far below the 1e-2
+  acceptance ceiling.
+* **sweep time + bytes** — wall-clock of the jit'd fused sweep
+  ``A^T (A Q)`` at both dtypes (on CPU bf16 is emulated and usually NOT
+  faster — the byte halving pays on MXU/HBM hardware; the bytes/sweep
+  column is the machine-independent number) and the OOM operator's
+  staged H2D bytes per pass, which bf16 halves exactly.
+
+bf16 runs use ``eps=1e-4``: the subspace-convergence test cannot
+resolve principal angles below the bf16 noise floor, so a tighter eps
+only burns ``max_iters`` (see ``core/precision.py``).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only precision``
+     ``PYTHONPATH=src python benchmarks/precision.py --smoke``  (CI job)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.core import (DenseStreamOperator, dist_tsvd, oom_tsvd,
+                        sparse_tsvd, tsvd)
+from repro.core.tsvd import sweep_ops
+
+try:  # the spectra are owned by the warm-start benchmark (shared problems)
+    from benchmarks.warmstart import (OVERSAMPLE, clustered_spectrum,
+                                      separated_spectrum, _lowrank)
+except ImportError:  # `python benchmarks/precision.py` (no package parent)
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.warmstart import (OVERSAMPLE, clustered_spectrum,
+                                      separated_spectrum, _lowrank)
+
+EPS = {"float32": 1e-6, "bfloat16": 1e-4}
+
+
+def _measure_paths(A, k, dtype, *, max_iters=300):
+    """Yield (path, result) for all four drivers at one sweep dtype."""
+    Aj = jnp.asarray(A)
+    mesh = make_mesh((1,), ("data",))
+    op = DenseStreamOperator(A)
+    eps = EPS[dtype]
+    kw = dict(method="block", eps=eps, max_iters=max_iters,
+              sweep_dtype=dtype)
+    yield "serial", tsvd(Aj, k, jax.random.PRNGKey(0), **kw)
+    yield "dist", dist_tsvd(Aj, k, mesh, **kw)
+    yield "oom", oom_tsvd(A, k, n_blocks=4, **kw)
+    yield "sparse", sparse_tsvd(op, k, **kw)
+
+
+def _errors(A, res, s_np):
+    U, S, V = np.asarray(res.U), np.asarray(res.S), np.asarray(res.V)
+    recon = np.linalg.norm(A - (U * S) @ V.T) / np.linalg.norm(A)
+    sig = float(np.max(np.abs(S - s_np[: S.shape[0]]) / s_np[: S.shape[0]]))
+    return recon, sig
+
+
+def accuracy(rng, m, n, k):
+    for spec_name, spectrum in (("separated", separated_spectrum(k)),
+                                ("clustered", clustered_spectrum(k))):
+        A = _lowrank(rng, m, n, spectrum)
+        s_np = np.linalg.svd(A, compute_uv=False)
+        floor = (np.linalg.norm(s_np[k:]) / np.linalg.norm(s_np))
+        print(f"-- {spec_name} spectrum (rank-{k} truncation floor "
+              f"{floor:.2e}) --")
+        print(f"{'path':>8} {'dtype':>9} {'recon err':>10} "
+              f"{'sigma err':>10} {'iters':>6} {'passes':>7}")
+        worst_sig = 0.0
+        for dtype in ("float32", "bfloat16"):
+            for path, res in _measure_paths(A, k, dtype):
+                recon, sig = _errors(A, res, s_np)
+                if dtype == "bfloat16":
+                    worst_sig = max(worst_sig, sig)
+                print(f"{path:>8} {dtype:>9} {recon:>10.2e} {sig:>10.2e} "
+                      f"{int(res.iters[0]):>6d} "
+                      f"{int(res.passes_over_A):>7d}")
+        print(f"   worst bf16 sigma err: {worst_sig:.2e} "
+              f"(acceptance ceiling: 1e-2)")
+
+
+def sweep_time(rng, m, n, k, reps=20):
+    """Wall-clock + bytes of one fused sweep ``A^T (A Q)`` per dtype."""
+    A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    Q = jnp.linalg.qr(
+        jnp.asarray(rng.normal(size=(n, k)).astype(np.float32)))[0]
+    print(f"-- fused sweep A^T (A Q), {m}x{n} k={k}, {reps} reps --")
+    print(f"{'dtype':>9} {'sweep_ms':>9} {'A bytes/sweep':>14} "
+          f"{'oom H2D bytes/pass':>19}")
+    for dtype in ("float32", "bfloat16"):
+        mm, rmm = sweep_ops(A, dtype)
+        chain = jax.jit(lambda Q: rmm(mm(Q)))
+        jax.block_until_ready(chain(Q))          # compile
+        t0 = time.time()
+        for _ in range(reps):
+            # re-apply to the orthonormal Q each rep: iterating Z=chain(Z)
+            # without renormalization grows norms by ~sigma_max^2 per rep
+            # and overflows fp32 mid-timing at the non-smoke sizes
+            Z = chain(Q)
+        jax.block_until_ready(Z)
+        ms = (time.time() - t0) / reps * 1e3
+        itemsize = jnp.dtype(dtype).itemsize
+        # what HostBlockedMatrix(stage_dtype=dtype).bytes_per_pass reports
+        h2d_per_pass = m * n * itemsize
+        print(f"{dtype:>9} {ms:>9.2f} {2 * m * n * itemsize:>14d} "
+              f"{h2d_per_pass:>19d}")
+    print("(CPU runs emulate bf16 — the byte halving, not the wall-clock,"
+          " is the hardware-portable win)")
+
+
+def run(fast: bool = True, smoke: bool = False):
+    rng = np.random.default_rng(0)
+    if smoke:
+        m, n, k = 96, 64, 8
+    else:
+        m, n, k = (512, 256, 32) if fast else (2048, 512, 64)
+    print(f"\n== mixed-precision block sweeps ({m}x{n}, rank {k}, "
+          f"oversample {OVERSAMPLE}) ==")
+    accuracy(rng, m, n, k)
+    sweep_time(rng, m, n, k, reps=5 if smoke else 20)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI import/run check")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

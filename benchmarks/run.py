@@ -8,6 +8,8 @@
                        iteration vs rank-one deflation
   warmstart          — range-finder warm start: iterations-to-convergence
                        cold vs warmup_q=1, all four paths
+  precision          — mixed-precision (bf16) block sweeps: accuracy +
+                       sweep time/bytes fp32 vs bf16, all four paths
   roofline           — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]``
@@ -29,8 +31,8 @@ def main():
     args = ap.parse_args()
 
     from benchmarks import (accuracy, block_vs_deflation, oom_batching,
-                            roofline, scaling_dense, scaling_sparse,
-                            warmstart)
+                            precision, roofline, scaling_dense,
+                            scaling_sparse, warmstart)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
@@ -38,6 +40,7 @@ def main():
         "oom_batching": oom_batching.run,
         "block_vs_deflation": block_vs_deflation.run,
         "warmstart": warmstart.run,
+        "precision": precision.run,
         "roofline": roofline.run,
     }
     results = {}

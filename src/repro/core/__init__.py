@@ -1,4 +1,8 @@
 """repro.core — the paper's contribution: distributed out-of-memory t-SVD."""
+from repro.core.precision import (  # noqa: F401
+    SWEEP_DTYPES,
+    resolve_sweep_dtype,
+)
 from repro.core.tsvd import (  # noqa: F401
     TSVDResult,
     tsvd,

@@ -38,7 +38,15 @@ own row block of ``Omega``), so well-separated spectra converge in 1-2
 subspace sweeps instead of ~10-15.  All methods report
 ``passes_over_A`` with the same accounting as ``repro.core.tsvd``
 (see ``_PASS_ACCOUNTING`` there): the faithful chain costs 3 A-sweeps
-per power step, the fused chain 2, the block step 2 per sweep.
+per power step, the fused chain 2, the block step 2 per sweep — counts
+are independent of the sweep dtype.
+
+``sweep_dtype="bfloat16"`` (block only) applies the mixed-precision
+policy (``core/precision.py``): each shard is cast once to bf16 and
+both fused sweeps read the 2-byte copy with fp32 MXU accumulation,
+halving the per-chip HBM bytes of the dominant term; psum payloads,
+QR, and the Rayleigh–Ritz eigh stay fp32 (collective bytes unchanged —
+see ``launch/svd_dryrun.py`` variant ``block/bf16``).
 """
 from __future__ import annotations
 
@@ -53,7 +61,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import all_gather_inv as _all_gather_inv
 from repro.compat import pvary as _pvary
 from repro.compat import shard_map as _shard_map
+from repro.core.precision import resolve_sweep_dtype as _resolve_sweep_dtype
 from repro.core.tsvd import block_power_iterate as _block_power_iterate
+from repro.core.tsvd import sweep_ops as _sweep_ops
 from repro.core.tsvd import warm_start_width as _warm_start_width
 
 
@@ -183,12 +193,18 @@ def dist_tsvd(
     seed: int = 0,
     warmup_q: int = 0,              # block only: range-finder warm start
     oversample: int = 8,            # block only: extra sketch columns
+    sweep_dtype: str = "float32",   # block only: "float32" | "bfloat16"
 ) -> DistTSVDResult:
     """Distributed t-SVD of ``A`` row-sharded over ``axes`` of ``mesh``.
 
     Wide matrices (m < n) are handled CSVD-style by transposing in and
     swapping U/V out.  ``m`` must be divisible by the product of the mesh
     axis sizes (pad upstream; `repro.core.partition` does the bookkeeping).
+
+    ``sweep_dtype="bfloat16"`` (block only) casts each shard to bf16 for
+    the fused ``(n, l)``/``(n, k)`` sweeps — halving the per-chip HBM
+    read of the dominant term — while the psum payload, QR, and the
+    Rayleigh–Ritz eigh stay fp32 (``core/precision.py``).
     """
     if method not in ("gram", "gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
@@ -201,6 +217,11 @@ def dist_tsvd(
     if warmup_q and method != "block":
         raise ValueError("warmup_q > 0 requires method='block' "
                          "(deflation has no block iterate to warm-start)")
+    if (_resolve_sweep_dtype(sweep_dtype) != jnp.float32
+            and method != "block"):
+        raise ValueError("sweep_dtype != 'float32' requires method='block' "
+                         "(only the block sweeps have the mixed-precision "
+                         "policy; deflation stays the fp32 oracle)")
     m, n = A.shape
     transposed = m < n
     if transposed:
@@ -228,6 +249,11 @@ def dist_tsvd(
         A32 = A_loc.astype(jnp.float32)
 
         if method == "block":
+            # Precision policy: the shard is cast ONCE to the sweep dtype
+            # and both A-sized sweeps read the narrow copy (fp32
+            # accumulation inside the dots); everything that crosses the
+            # mesh (psum payloads) or factorizes (QR/eigh) stays fp32.
+            mm_loc, rmm_loc = _sweep_ops(A32, sweep_dtype)
             if warmup_q > 0:
                 # Range-finder warm start from the same fused (n, l) psum
                 # as the block step: each shard sketches its own row block
@@ -238,11 +264,11 @@ def dist_tsvd(
                     idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
                 okey = jax.random.fold_in(jax.random.fold_in(key, 1), idx)
                 Om = jax.random.normal(okey, (m_loc, l), jnp.float32)
-                Y = jax.lax.psum(A32.T @ Om, axes)     # sketch: ONE psum
+                Y = jax.lax.psum(rmm_loc(Om), axes)    # sketch: ONE psum
                 Y = jnp.linalg.qr(Y)[0]
                 for _ in range(warmup_q):              # q refinements
                     Y = jnp.linalg.qr(
-                        jax.lax.psum(A32.T @ (A32 @ Y), axes))[0]
+                        jax.lax.psum(rmm_loc(mm_loc(Y)), axes))[0]
                 Q0 = Y
                 warm_passes = 1 + 2 * warmup_q
             else:
@@ -253,7 +279,7 @@ def dist_tsvd(
             def matmat(Q):
                 # ONE fused (n, k) psum per step advances all k ranks;
                 # deflation pays >= one collective per step per rank.
-                return jax.lax.psum(A32.T @ (A32 @ Q), axes)
+                return jax.lax.psum(rmm_loc(mm_loc(Q)), axes)
 
             Q, iters = _block_power_iterate(
                 matmat, Q0, eps=eps, max_iters=max_iters,

@@ -40,12 +40,20 @@ generated on the fly, never resident) plus ``q`` fused ``gram_chain``
 refinement passes, turning ~10-15 cold subspace iterations into 1-2 for
 spectra with a decaying tail.
 
+``sweep_dtype="bfloat16"`` (block only) applies the mixed-precision
+policy (``core/precision.py``) at the layer that matters most here:
+``HostBlockedMatrix`` *stages* the host blocks at 2 bytes/element, so
+every H2D batch copy — the paper's dominant degree-1 latency — moves
+half the bytes, while on-device accumulation, QR, and Rayleigh–Ritz
+stay fp32.
+
 Both strategies report ``iters`` and ``passes_over_A`` in ``OOMResult``.
 A pass is ONE full H2D stream of the host blocks (the fused chain
 generates/copies each block once), so block costs
 ``[1 + q if warm] + iters + 1`` and deflation ``sum_l (2 iters_l + 1)``
 — exactly what an instrumented ``HostBlockedMatrix`` counts (asserted in
-the tests).
+the tests).  The count is dtype-independent: bf16 staging halves
+``bytes_per_pass``, never the number of passes.
 """
 from __future__ import annotations
 
@@ -56,8 +64,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import resolve_sweep_dtype
 from repro.core.tsvd import rayleigh_ritz_from_W
 from repro.core.partition import BatchPlan, make_batch_plan, symmetric_tasks
+
+
+def _f32dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a @ b`` with fp32 accumulation regardless of operand dtype.
+
+    For fp32 operands this is the plain dot (bit-stable with the
+    pre-policy code); for bf16-staged blocks the MXU reads 2-byte
+    operands and accumulates fp32 (``core/precision.py``).
+    """
+    if a.dtype == jnp.float32 and b.dtype == jnp.float32:
+        return a @ b
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -162,13 +183,23 @@ class HostBlockedMatrix:
     H2D-copied on demand. ``device_put`` of block ``b+1`` is issued while
     block ``b`` computes (JAX dispatch is async), which is the TPU-side
     analogue of the stream-queue overlap.
+
+    ``stage_dtype="bfloat16"`` stages the host blocks at 2 bytes/element,
+    so every H2D copy — the paper's dominant degree-1 cost — moves HALF
+    the bytes; on-device accumulation stays fp32 (``_f32dot``).  The
+    rounding happens once at staging time; all streamed ops then read
+    the narrow copy.
     """
 
-    def __init__(self, A_host: np.ndarray, n_blocks: int):
+    def __init__(self, A_host: np.ndarray, n_blocks: int,
+                 stage_dtype="float32"):
         self.m, self.n = A_host.shape
+        self.stage_dtype = resolve_sweep_dtype(stage_dtype)
         self.plan = make_batch_plan(self.m, n_blocks, collinear=True)
         self._blocks = [
-            np.ascontiguousarray(A_host[lo:hi], dtype=np.float32)
+            np.ascontiguousarray(  # ml_dtypes-backed bf16 when staged narrow
+                np.asarray(A_host[lo:hi], dtype=np.float32),
+                dtype=self.stage_dtype)
             for lo, hi in (self.plan.bounds(b) for b in range(self.plan.n_batches))
         ]
 
@@ -176,13 +207,18 @@ class HostBlockedMatrix:
     def n_blocks(self) -> int:
         return self.plan.n_batches
 
+    @property
+    def bytes_per_pass(self) -> int:
+        """H2D bytes one full stream of the host blocks moves."""
+        return self.m * self.n * self.stage_dtype.itemsize
+
     def block(self, b: int) -> jax.Array:
         return jnp.asarray(self._blocks[b])
 
     def gram(self) -> jax.Array:
         """Streamed ``A^T A`` with bounded device memory."""
         acc = jnp.zeros((self.n, self.n), jnp.float32)
-        step = jax.jit(lambda acc, blk: acc + blk.T @ blk)
+        step = jax.jit(lambda acc, blk: acc + _f32dot(blk.T, blk))
         # Prefetch pipeline: issue H2D for the next block while current
         # computes (async dispatch) — the q_s=2 double-buffer case.
         nxt = self.block(0)
@@ -194,27 +230,50 @@ class HostBlockedMatrix:
         return acc
 
     def matvec(self, v: jax.Array) -> jax.Array:
-        """``A @ v`` streamed; returns (m,)."""
+        """``A @ v`` streamed; returns (m,).  Double-buffered like
+        ``gram``/``gram_chain`` so the next block's H2D overlaps the
+        current block's compute."""
         outs = []
-        mv = jax.jit(lambda blk, v: blk @ v)
+        mv = jax.jit(lambda blk, v: _f32dot(blk, v))
+        nxt = self.block(0)
         for b in range(self.n_blocks):
-            outs.append(mv(self.block(b), v))
+            cur = nxt
+            if b + 1 < self.n_blocks:  # prefetch next block (async H2D)
+                nxt = self.block(b + 1)
+            outs.append(mv(cur, v))
         return jnp.concatenate(outs)
 
     def matmat(self, Q: jax.Array) -> jax.Array:
-        """``A @ Q`` streamed; Q: (n, k) -> (m, k).  One pass over A."""
+        """``A @ Q`` streamed; Q: (n, k) -> (m, k).  One pass over A,
+        double-buffered — this is the Rayleigh–Ritz extraction pass of
+        the block driver, so serializing H2D against compute here would
+        stall the exact pipeline the iterate just kept busy.  ``Q`` stays
+        fp32 (extraction accuracy); only ``A``'s staging is narrow."""
         outs = []
-        mm = jax.jit(lambda blk, Q: blk @ Q)
+        mm = jax.jit(lambda blk, Q: _f32dot(blk, Q))
+        nxt = self.block(0)
         for b in range(self.n_blocks):
-            outs.append(mm(self.block(b), Q))
+            cur = nxt
+            if b + 1 < self.n_blocks:  # prefetch next block (async H2D)
+                nxt = self.block(b + 1)
+            outs.append(mm(cur, Q))
         return jnp.concatenate(outs)
 
     def gram_chain(self, Q: jax.Array) -> jax.Array:
         """``A^T (A Q)`` in ONE streamed pass: each host block is H2D-copied
         once and multiplied against all k columns — the block method's
-        k-fold H2D saving over per-rank deflation loops."""
+        k-fold H2D saving over per-rank deflation loops.  Under bf16
+        staging both sweep operands are narrow (``Q`` and the
+        intermediate are cast down) with fp32 accumulation."""
         acc = jnp.zeros((self.n, Q.shape[1]), jnp.float32)
-        step = jax.jit(lambda acc, blk, Q: acc + blk.T @ (blk @ Q))
+        sd = self.stage_dtype
+        if sd == jnp.float32:
+            step = jax.jit(lambda acc, blk, Q: acc + blk.T @ (blk @ Q))
+        else:
+            def _step(acc, blk, Q):
+                y = _f32dot(blk, Q.astype(sd))
+                return acc + _f32dot(blk.T, y.astype(sd))
+            step = jax.jit(_step)
         nxt = self.block(0)
         for b in range(self.n_blocks):
             cur = nxt
@@ -243,8 +302,8 @@ class CountingHostMatrix(HostBlockedMatrix):
     ``benchmarks/block_vs_deflation.py``.
     """
 
-    def __init__(self, A_host, n_blocks):
-        super().__init__(A_host, n_blocks)
+    def __init__(self, A_host, n_blocks, stage_dtype="float32"):
+        super().__init__(A_host, n_blocks, stage_dtype=stage_dtype)
         self.fetches = 0
 
     def block(self, b):
@@ -268,6 +327,16 @@ class OOMResult(NamedTuple):
     passes_over_A: int        # full H2D streams of the host blocks
 
 
+# How often the DEFLATION inner loop fetches the device-side convergence
+# flag.  ``bool(done)`` forces a host sync, stalling the async-dispatch
+# H2D prefetch pipeline; checking every few steps keeps dispatch running
+# ahead at the cost of at most CHECK_EVERY - 1 extra (cheap, vector-
+# sized) iterations.  The BLOCK loop instead uses a lag-one check (see
+# ``_oom_block_tsvd``): its iterations are full passes over A, so even
+# one skipped check is expensive there.
+CONVERGENCE_CHECK_EVERY = 4
+
+
 def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
                     seed, warmup_q, oversample) -> OOMResult:
     """Block subspace iteration on a streamed host-resident operator.
@@ -276,16 +345,28 @@ def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
     ``A_b^T (A_b Q)`` chain); extraction adds one more pass for
     ``W = A Q`` plus small on-device QR/SVD factorizations.  The warm
     start adds one streamed sketch pass + one fused pass per refinement.
+    The sweep precision follows the operator's ``stage_dtype`` (bf16
+    staging halves every H2D copy; QR/Rayleigh–Ritz stay fp32).
+
+    The subspace-convergence scalar is computed on device every step but
+    synced on host with a ONE-ITERATION LAG: by the time ``float(...)``
+    runs, the next iteration's H2D stream is already dispatched, so the
+    sync can never stall the prefetch pipeline (the device finishes the
+    tiny gap reduction long before the in-flight pass), and the
+    overshoot is bounded at one pass over A — unlike the deflation
+    loop's every-``CONVERGENCE_CHECK_EVERY`` batching, which is the
+    right trade only when iterations are cheap.
     """
     n = op.n
     key = jax.random.PRNGKey(seed)
     qr = jax.jit(jnp.linalg.qr)
+    sd = op.stage_dtype
     if warmup_q > 0:
         from repro.core.tsvd import warm_start_width
         l = warm_start_width(k, oversample, n)
         okey = jax.random.fold_in(key, 1)
         acc = jnp.zeros((n, l), jnp.float32)
-        step = jax.jit(lambda acc, blk, om: acc + blk.T @ om)
+        step = jax.jit(lambda acc, blk, om: acc + _f32dot(blk.T, om))
         nxt = op.block(0)
         for b in range(op.n_blocks):       # sketch A^T Omega: one pass,
             cur = nxt                      # Omega blocks never resident
@@ -293,7 +374,7 @@ def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
                 nxt = op.block(b + 1)
             om_b = jax.random.normal(jax.random.fold_in(okey, b),
                                      (cur.shape[0], l), jnp.float32)
-            acc = step(acc, cur, om_b)
+            acc = step(acc, cur, om_b.astype(sd))
         Q = qr(acc)[0]
         for _ in range(warmup_q):          # q fused refinement passes
             Q = qr(op.gram_chain(Q))[0]
@@ -302,28 +383,28 @@ def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
         Q = jnp.linalg.qr(jax.random.normal(key, (n, k), jnp.float32))[0]
         passes = 0
     l_eff = Q.shape[1]
+    # rotation-invariant subspace gap (see tsvd.block_power_iterate),
+    # computed on device every step, synced one iteration late
+    gap = jax.jit(lambda Q, Qn: l_eff - jnp.sum((Q.T @ Qn) ** 2))
+    prev_gap = None
     it = 0
     for it in range(1, max_iters + 1):
-        Qn, _ = qr(op.gram_chain(Q))       # one pass over A
+        Qn, _ = qr(op.gram_chain(Q))       # one pass over A (async dispatch)
         passes += 1
-        # rotation-invariant subspace test (see tsvd.block_power_iterate)
-        ssc = float(jnp.sum((Q.T @ Qn) ** 2))
+        gap_dev = gap(Q, Qn)               # no sync: stays on device
         Q = Qn
-        if (l_eff - ssc) <= eps * l_eff:
+        # Lag-one sync: prev_gap's reduction finished before this
+        # iteration's in-flight stream, so float() returns immediately
+        # and dispatch stays ahead; costs at most one overshoot pass.
+        if prev_gap is not None and float(prev_gap) <= eps * l_eff:
             break
+        prev_gap = gap_dev
     W = op.matmat(Q)                       # one more pass over A
     passes += 1
     U, S, V = rayleigh_ritz_from_W(W, Q)
     return OOMResult(U=U[:, :k], S=S[:k], V=V[:, :k],
                      iters=jnp.full((k,), it, jnp.int32),
                      passes_over_A=passes)
-
-
-# How often the deflation inner loop fetches the device-side convergence
-# flag.  ``bool(done)`` forces a host sync, stalling the async-dispatch
-# prefetch pipeline; checking every few steps keeps dispatch running ahead
-# at the cost of at most CHECK_EVERY - 1 extra (cheap) iterations.
-CONVERGENCE_CHECK_EVERY = 4
 
 
 def oom_tsvd(
@@ -338,6 +419,7 @@ def oom_tsvd(
     op: HostBlockedMatrix | None = None,
     warmup_q: int = 0,          # block only: range-finder warm start
     oversample: int = 8,        # block only: extra sketch columns
+    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
 ) -> OOMResult:
     """Degree-1 OOM truncated SVD: ``A`` stays on host, blocks streamed.
 
@@ -349,7 +431,13 @@ def oom_tsvd(
     Assumes the RSVD (tall) orientation; wide inputs are transposed in and
     the factors swapped out.  ``op`` injects a pre-built (possibly
     instrumented) ``HostBlockedMatrix`` — it must already be in the tall
-    orientation and overrides ``A_host``/``n_blocks``.
+    orientation and overrides ``A_host``/``n_blocks``; its ``stage_dtype``
+    must agree with ``sweep_dtype``.
+
+    ``sweep_dtype="bfloat16"`` (block only) stages the host blocks at 2
+    bytes/element, so every H2D batch copy — the paper's dominant
+    degree-1 latency — moves half the bytes; device accumulation, QR,
+    and Rayleigh–Ritz stay fp32 (``core/precision.py``).
     """
     if method not in ("gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
@@ -357,7 +445,17 @@ def oom_tsvd(
     if warmup_q and method != "block":
         raise ValueError("warmup_q > 0 requires method='block' "
                          "(deflation has no block iterate to warm-start)")
+    sd = resolve_sweep_dtype(sweep_dtype)
+    if sd != jnp.float32 and method != "block":
+        raise ValueError("sweep_dtype != 'float32' requires method='block' "
+                         "(only the block sweeps have the mixed-precision "
+                         "policy; deflation stays the fp32 oracle)")
     if op is not None:
+        if op.stage_dtype != sd:
+            raise ValueError(
+                f"injected op staged as {op.stage_dtype.name} but "
+                f"sweep_dtype={sd.name!r}; build the operator with "
+                f"stage_dtype={sd.name!r}")
         transposed = False
         m, n = op.m, op.n
     else:
@@ -366,7 +464,7 @@ def oom_tsvd(
         if transposed:
             A_host = A_host.T
             m, n = n, m
-        op = HostBlockedMatrix(A_host, n_blocks)
+        op = HostBlockedMatrix(A_host, n_blocks, stage_dtype=sd)
 
     if method == "block":
         res = _oom_block_tsvd(op, k, eps=eps, max_iters=max_iters,

@@ -22,6 +22,23 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.core.precision import resolve_sweep_dtype
+
+
+def _round_to(x: np.ndarray, dtype) -> np.ndarray:
+    """Round operand values to the sweep dtype, then compute in fp32.
+
+    The numpy emulation of the device policy (``core/precision.py``):
+    bf16 *operands* (values round at ~4e-3 relative — ml_dtypes provides
+    the numpy bf16), fp32 products and accumulation — exactly what
+    ``preferred_element_type=float32`` gives the MXU.  ``float32`` is a
+    no-op.
+    """
+    sd = np.dtype(resolve_sweep_dtype(dtype))
+    if sd == np.float32:
+        return np.asarray(x, np.float32)
+    return np.asarray(x, np.float32).astype(sd).astype(np.float32)
+
 
 @dataclasses.dataclass
 class SyntheticSparseMatrix:
@@ -116,26 +133,35 @@ class SyntheticSparseMatrix:
     # (n, k) block.  Still O(nnz * k) work and one stream of the nonzeros
     # per call — the k columns ride along on each generated row block.
 
-    def matmat(self, Q: np.ndarray, block_rows: int = 1 << 16) -> np.ndarray:
-        """``A @ Q`` streaming row blocks; Q: (n, k) -> (m, k)."""
+    def matmat(self, Q: np.ndarray, block_rows: int = 1 << 16,
+               dtype="float32") -> np.ndarray:
+        """``A @ Q`` streaming row blocks; Q: (n, k) -> (m, k).
+
+        ``dtype`` is the sweep dtype: nonzero values and ``Q`` round to
+        it, accumulation stays fp32 (see ``_round_to``).
+        """
         out = np.zeros((self.m, Q.shape[1]), np.float32)
+        Qs = _round_to(Q, dtype)
         for lo in range(0, self.m, block_rows):
             hi = min(lo + block_rows, self.m)
             rows, cols, vals = self.row_block_coo(lo, hi)
-            np.add.at(out, rows, vals[:, None] * Q[cols])
+            np.add.at(out, rows, _round_to(vals, dtype)[:, None] * Qs[cols])
         return out
 
-    def rmatmat(self, Y: np.ndarray, block_rows: int = 1 << 16) -> np.ndarray:
+    def rmatmat(self, Y: np.ndarray, block_rows: int = 1 << 16,
+                dtype="float32") -> np.ndarray:
         """``A.T @ Y`` streaming row blocks; Y: (m, k) -> (n, k)."""
         out = np.zeros((self.n, Y.shape[1]), np.float32)
+        Ys = _round_to(Y, dtype)
         for lo in range(0, self.m, block_rows):
             hi = min(lo + block_rows, self.m)
             rows, cols, vals = self.row_block_coo(lo, hi)
-            np.add.at(out, cols, vals[:, None] * Y[rows])
+            np.add.at(out, cols, _round_to(vals, dtype)[:, None] * Ys[rows])
         return out
 
     def range_sketch(self, l: int, seed: int = 0,
-                     block_rows: int = 1 << 16) -> np.ndarray:
+                     block_rows: int = 1 << 16,
+                     dtype="float32") -> np.ndarray:
         """``A^T Omega`` with ``Omega ~ N(0,1)^(m x l)`` generated per row
         block on the fly — the randomized range-finder sketch riding the
         same procedural stream as the mat-vecs.  ONE pass over the
@@ -148,26 +174,33 @@ class SyntheticSparseMatrix:
             rng = np.random.default_rng(
                 np.random.SeedSequence([self.seed, seed, bi]))
             om = rng.standard_normal((hi - lo, l)).astype(np.float32)
-            np.add.at(out, cols, vals[:, None] * om[rows - lo])
+            np.add.at(out, cols, (_round_to(vals, dtype)[:, None]
+                                  * _round_to(om, dtype)[rows - lo]))
         return out
 
     def gram_chain(self, Q: np.ndarray,
-                   block_rows: int = 1 << 16) -> np.ndarray:
+                   block_rows: int = 1 << 16,
+                   dtype="float32") -> np.ndarray:
         """``A^T (A Q)`` — the Eq. 2 chain on a k-wide block, fused.
 
         Each row block's nonzeros are generated ONCE and used for both
         the forward (``y_b = A_b Q``) and reverse (``A_b^T y_b``) halves —
         the on-the-fly COO generation dominates at the PB scale this
         module targets, so the fusion halves the per-iteration cost vs
-        ``rmatmat(matmat(Q))``.
+        ``rmatmat(matmat(Q))``.  Under ``dtype="bfloat16"`` the values,
+        ``Q``, and the fp32-accumulated intermediate ``y`` all round to
+        bf16 between the two halves (the kernel chain's contract).
         """
         out = np.zeros((self.n, Q.shape[1]), np.float32)
+        Qs = _round_to(Q, dtype)
         for lo in range(0, self.m, block_rows):
             hi = min(lo + block_rows, self.m)
             rows, cols, vals = self.row_block_coo(lo, hi)
+            vs = _round_to(vals, dtype)
             y = np.zeros((hi - lo, Q.shape[1]), np.float32)
-            np.add.at(y, rows - lo, vals[:, None] * Q[cols])
-            np.add.at(out, cols, vals[:, None] * y[rows - lo])
+            np.add.at(y, rows - lo, vs[:, None] * Qs[cols])
+            y = _round_to(y, dtype)
+            np.add.at(out, cols, vs[:, None] * y[rows - lo])
         return out
 
 
@@ -188,6 +221,15 @@ class DenseStreamOperator:
     def __post_init__(self):
         self.A = np.asarray(self.A, np.float32)
         self.m, self.n = self.A.shape
+        self._staged = {}  # per-sweep-dtype rounded copies of A
+
+    def _A(self, dtype) -> np.ndarray:
+        """A with values rounded to the sweep dtype (cached: the round
+        trip is O(mn) and the block iterate calls per iteration)."""
+        key = np.dtype(resolve_sweep_dtype(dtype)).name
+        if key not in self._staged:
+            self._staged[key] = _round_to(self.A, dtype)
+        return self._staged[key]
 
     def matvec(self, v, block_rows: int = 0):
         return self.A @ v
@@ -195,18 +237,22 @@ class DenseStreamOperator:
     def rmatvec(self, u, block_rows: int = 0):
         return self.A.T @ u
 
-    def matmat(self, Q, block_rows: int = 0):
-        return self.A @ Q
+    def matmat(self, Q, block_rows: int = 0, dtype="float32"):
+        return self._A(dtype) @ _round_to(Q, dtype)
 
-    def rmatmat(self, Y, block_rows: int = 0):
-        return self.A.T @ Y
+    def rmatmat(self, Y, block_rows: int = 0, dtype="float32"):
+        return self._A(dtype).T @ _round_to(Y, dtype)
 
-    def gram_chain(self, Q, block_rows: int = 0):
-        return self.A.T @ (self.A @ Q)
+    def gram_chain(self, Q, block_rows: int = 0, dtype="float32"):
+        As = self._A(dtype)
+        y = _round_to(As @ _round_to(Q, dtype), dtype)
+        return As.T @ y
 
-    def range_sketch(self, l, seed: int = 0, block_rows: int = 0):
+    def range_sketch(self, l, seed: int = 0, block_rows: int = 0,
+                     dtype="float32"):
         rng = np.random.default_rng(np.random.SeedSequence([seed, l]))
-        return self.A.T @ rng.standard_normal((self.m, l)).astype(np.float32)
+        om = rng.standard_normal((self.m, l)).astype(np.float32)
+        return self._A(dtype).T @ _round_to(om, dtype)
 
 
 class SparseTSVDResult(NamedTuple):
@@ -220,22 +266,27 @@ class SparseTSVDResult(NamedTuple):
 
 
 def _sparse_block_tsvd(A, k, *, eps, max_iters, seed, block_rows,
-                       warmup_q, oversample):
+                       warmup_q, oversample, sweep_dtype):
     """Block subspace iteration on the streamed sparse operator.
 
     Each iteration streams the nonzeros ONCE (the fused ``gram_chain``)
     and advances all k ranks; deflation streams twice per step *per
     rank*.  Extraction is Rayleigh–Ritz on the skinny ``W = A Q``.  The
     warm start costs one sketch stream + one fused stream per refinement.
+    The streamed sweeps honor ``sweep_dtype`` (bf16-rounded operands,
+    fp32 accumulation); QR, the ``W`` extraction pass, and Rayleigh–Ritz
+    stay fp32.
     """
     from repro.core.tsvd import rayleigh_ritz_from_W, warm_start_width
 
     if warmup_q > 0:
         l = warm_start_width(k, oversample, A.n)
-        Y = A.range_sketch(l, seed=seed, block_rows=block_rows)  # 1 pass
+        Y = A.range_sketch(l, seed=seed, block_rows=block_rows,
+                           dtype=sweep_dtype)    # 1 pass
         Q, _ = np.linalg.qr(Y)
         for _ in range(warmup_q):                 # q fused refinements
-            Q, _ = np.linalg.qr(A.gram_chain(Q, block_rows))
+            Q, _ = np.linalg.qr(A.gram_chain(Q, block_rows,
+                                             dtype=sweep_dtype))
         Q = Q.astype(np.float32)
         passes = 1 + warmup_q
     else:
@@ -246,14 +297,14 @@ def _sparse_block_tsvd(A, k, *, eps, max_iters, seed, block_rows,
     l_eff = Q.shape[1]
     it = 0
     for it in range(1, max_iters + 1):
-        Qn, _ = np.linalg.qr(A.gram_chain(Q, block_rows))
+        Qn, _ = np.linalg.qr(A.gram_chain(Q, block_rows, dtype=sweep_dtype))
         passes += 1
         # rotation-invariant subspace test (see tsvd.block_power_iterate)
         ssc = float(np.sum((Q.T @ Qn) ** 2))
         Q = Qn.astype(np.float32)
         if (l_eff - ssc) <= eps * l_eff:
             break
-    W = A.matmat(Q, block_rows)
+    W = A.matmat(Q, block_rows)                   # fp32 extraction pass
     passes += 1
     U, S, V = rayleigh_ritz_from_W(W, Q)
     return SparseTSVDResult(
@@ -273,6 +324,7 @@ def sparse_tsvd(
     method: str = "gramfree",   # "gramfree" | "block"
     warmup_q: int = 0,          # block only: range-finder warm start
     oversample: int = 8,        # block only: extra sketch columns
+    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
 ) -> SparseTSVDResult:
     """Gram-free t-SVD on the streamed sparse operator (Alg 1+4 semantics).
 
@@ -285,7 +337,12 @@ def sparse_tsvd(
     optionally warm-started via ``warmup_q``/``oversample``.  The result
     reports ``iters`` and ``passes_over_A`` (full streams of the
     nonzeros): block costs ``[1 + q if warm] + iters + 1``, deflation
-    ``sum_l (2 iters_l + 1)``.
+    ``sum_l (2 iters_l + 1)`` — counts are dtype-independent.
+
+    ``sweep_dtype="bfloat16"`` (block only) rounds the streamed sweep
+    operands to bf16 with fp32 accumulation — the host-side emulation of
+    the device policy (``core/precision.py``); on a real accelerator the
+    generated row blocks would stage/ship at half the bytes.
     """
     if method not in ("gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
@@ -293,10 +350,16 @@ def sparse_tsvd(
     if warmup_q and method != "block":
         raise ValueError("warmup_q > 0 requires method='block' "
                          "(deflation has no block iterate to warm-start)")
+    if (np.dtype(resolve_sweep_dtype(sweep_dtype)) != np.float32
+            and method != "block"):
+        raise ValueError("sweep_dtype != 'float32' requires method='block' "
+                         "(only the block sweeps have the mixed-precision "
+                         "policy; deflation stays the fp32 oracle)")
     if method == "block":
         return _sparse_block_tsvd(A, k, eps=eps, max_iters=max_iters,
                                   seed=seed, block_rows=block_rows,
-                                  warmup_q=warmup_q, oversample=oversample)
+                                  warmup_q=warmup_q, oversample=oversample,
+                                  sweep_dtype=sweep_dtype)
     rng = np.random.default_rng(seed)
     m, n = A.m, A.n
     U = np.zeros((m, k), np.float32)

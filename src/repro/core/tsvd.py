@@ -41,11 +41,17 @@ sweep instead of the cold ``(sigma_{k+1}/sigma_k)^2``.  The extra
 the Rayleigh–Ritz extraction.  ``warmup_q=0`` (default) keeps the cold
 random start.
 
+The block method also honors the **mixed-precision sweep policy**
+(``core/precision.py``): ``sweep_dtype="bfloat16"`` casts the A-sized
+sweep operands to bf16 with fp32 accumulation — halving the dominant
+HBM byte traffic — while QR and the Rayleigh–Ritz extraction stay fp32
+(``"float32"``, the default, is bit-stable with the pre-policy path).
+
 Every strategy reports uniform **pass accounting**: the result tuple
 carries ``iters`` (power/subspace iterations actually run) and
 ``passes_over_A`` (A-sized operand sweeps — the paper's dominant
-data-movement unit; see ``_PASS_ACCOUNTING`` below for the per-method
-formulas).
+data-movement unit, independent of the sweep dtype; see
+``_PASS_ACCOUNTING`` below for the per-method formulas).
 
 Deflation (``gram``/``gramfree``) stays the default and the numerical
 oracle; the property tests assert that all strategies agree with
@@ -58,6 +64,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.precision import resolve_sweep_dtype
 
 
 class TSVDResult(NamedTuple):
@@ -86,6 +94,10 @@ class TSVDResult(NamedTuple):
 # sweeps into ONE stream of the data, so their block formula is
 # [1 + q] + iters + 1 — documented there and cross-checked against an
 # instrumented operator in the tests.
+#
+# The accounting is dtype-independent: ``sweep_dtype="bfloat16"`` halves
+# the BYTES each pass moves (2 instead of 4 per element), never the
+# number of passes — the formulas above hold for every sweep dtype.
 
 
 def _l2norm(x: jax.Array) -> jax.Array:
@@ -286,40 +298,65 @@ def warm_start_width(k: int, oversample: int, N: int) -> int:
     return min(k + max(oversample, 0), N)
 
 
+def sweep_ops(X: jax.Array, sweep_dtype):
+    """``(matmat, rmatmat)`` closures for the two A-sized block sweeps.
+
+    The precision policy's single point of application on dense device
+    operands: the sweep *inputs* are cast to ``sweep_dtype`` (once for
+    ``X`` — the hot loop then reads 2-byte elements under bf16) while
+    every contraction pins ``preferred_element_type=float32`` so the MXU
+    accumulates in fp32.  ``sweep_dtype="float32"`` returns the plain
+    fp32 dots, bit-stable with the pre-policy code path.
+    """
+    sd = resolve_sweep_dtype(sweep_dtype)
+    if sd == jnp.float32:
+        return (lambda Q: X @ Q), (lambda Y: X.T @ Y)
+    Xs = X.astype(sd)
+    mm = lambda Q: jnp.matmul(Xs, Q.astype(sd),
+                              preferred_element_type=jnp.float32)
+    rmm = lambda Y: jnp.matmul(Xs.T, Y.astype(sd),
+                               preferred_element_type=jnp.float32)
+    return mm, rmm
+
+
 def range_finder_q0(X: jax.Array, k: int, key: jax.Array, *,
-                    warmup_q: int, oversample: int) -> jax.Array:
+                    warmup_q: int, oversample: int,
+                    sweep_dtype="float32") -> jax.Array:
     """Randomized range-finder start ``Q0 = orth((X^T X)^q X^T Omega)``.
 
     ``X`` is the tall ``(M, N)`` operand.  QR re-orthonormalizes between
     refinements (numerically identical subspace to the literal power of
     the formula, but immune to ``sigma^(2q)`` dynamic-range blow-up).
-    Costs ``1 + 2 * warmup_q`` passes over ``X``.
+    Costs ``1 + 2 * warmup_q`` passes over ``X``; the sketch and the
+    refinement sweeps honor the ``sweep_dtype`` policy (QR stays fp32).
     """
     M, N = X.shape
     l = warm_start_width(k, oversample, N)
+    mm, rmm = sweep_ops(X, sweep_dtype)
     Om = jax.random.normal(jax.random.fold_in(key, 1), (M, l), jnp.float32)
-    Y = jnp.linalg.qr(X.T @ Om)[0]              # sketch: one pass over X
+    Y = jnp.linalg.qr(rmm(Om))[0]               # sketch: one pass over X
     for _ in range(warmup_q):                   # q refinements: two passes each
-        Y = jnp.linalg.qr(X.T @ (X @ Y))[0]
+        Y = jnp.linalg.qr(rmm(mm(Y)))[0]
     return Y
 
 
 def _block_tsvd(A, k, key, *, eps, max_iters, force_iters, warmup_q,
-                oversample):
+                oversample, sweep_dtype):
     """Rank-k t-SVD by block subspace iteration + Rayleigh–Ritz."""
     m, n = A.shape
     tall = m >= n
     X = A if tall else A.T                      # (M, N), M >= N
     N = X.shape[1]
+    mm, rmm = sweep_ops(X, sweep_dtype)
     if warmup_q > 0:
         Q0 = range_finder_q0(X, k, key, warmup_q=warmup_q,
-                             oversample=oversample)
+                             oversample=oversample, sweep_dtype=sweep_dtype)
         warm_passes = 1 + 2 * warmup_q
     else:
         Q0 = jnp.linalg.qr(jax.random.normal(key, (N, k), jnp.float32))[0]
         warm_passes = 0
     Q, iters = block_power_iterate(
-        lambda Q: X.T @ (X @ Q),                # two passes over X per step
+        lambda Q: rmm(mm(Q)),                   # two passes over X per step
         Q0, eps=eps, max_iters=max_iters, force_iters=force_iters)
     U, S, V = rayleigh_ritz(X, Q)               # one more pass over X
     U, S, V = U[:, :k], S[:k], V[:, :k]         # drop oversampled columns
@@ -332,7 +369,7 @@ def _block_tsvd(A, k, key, *, eps, max_iters, force_iters, warmup_q,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "eps", "max_iters", "force_iters", "method",
-                     "warmup_q", "oversample"),
+                     "warmup_q", "oversample", "sweep_dtype"),
 )
 def tsvd(
     A: jax.Array,
@@ -345,6 +382,7 @@ def tsvd(
     method: str = "gram",  # "gram" | "gramfree" | "block"
     warmup_q: int = 0,     # block only: range-finder warm start (0 = cold)
     oversample: int = 8,   # block only: extra sketch columns p (l = k + p)
+    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
 ) -> TSVDResult:
     """Truncated SVD of ``A`` to rank ``k``.
 
@@ -359,7 +397,14 @@ def tsvd(
     ``warmup_q >= 1`` (block only) initializes the iterate with the
     randomized range finder ``orth((A^T A)^q A^T Omega)`` using
     ``k + oversample`` sketch columns — see the module docstring.  All
-    methods report ``passes_over_A`` per ``_PASS_ACCOUNTING``.
+    methods report ``passes_over_A`` per ``_PASS_ACCOUNTING`` (the count
+    is dtype-independent).
+
+    ``sweep_dtype="bfloat16"`` (block only) runs the two A-sized sweeps
+    per step — and the warm-start sketch sweeps — on bf16 operands with
+    fp32 accumulation, halving the dominant HBM byte traffic; QR and the
+    Rayleigh–Ritz extraction stay fp32 (see ``core/precision.py`` for
+    the policy and the recommended looser ``eps``).
     """
     if method not in ("gram", "gramfree", "block"):
         raise ValueError(f"unknown method {method!r}; "
@@ -367,6 +412,11 @@ def tsvd(
     if warmup_q and method != "block":
         raise ValueError("warmup_q > 0 requires method='block' "
                          "(deflation has no block iterate to warm-start)")
+    sd = resolve_sweep_dtype(sweep_dtype)
+    if sd != jnp.float32 and method != "block":
+        raise ValueError("sweep_dtype != 'float32' requires method='block' "
+                         "(only the block sweeps have the mixed-precision "
+                         "policy; deflation stays the fp32 oracle)")
     if key is None:
         key = jax.random.PRNGKey(0)
     m, n = A.shape
@@ -374,7 +424,7 @@ def tsvd(
     if method == "block":
         return _block_tsvd(A, k, key, eps=eps, max_iters=max_iters,
                            force_iters=force_iters, warmup_q=warmup_q,
-                           oversample=oversample)
+                           oversample=oversample, sweep_dtype=sweep_dtype)
     tall = m >= n
 
     U = jnp.zeros((m, k), jnp.float32)

@@ -15,6 +15,19 @@ full ``k``-column block:
   reduction (m) innermost, ``(bm, k)`` RHS tiles, accumulating ``(bn, k)``
   output tiles resident in VMEM.
 
+All three entry points take a ``dtype`` (the ``sweep_dtype`` of the
+mixed-precision policy, ``repro/core/precision.py``): operands are cast
+before the kernel so the tiles stream through VMEM at that width — bf16
+halves the HBM bytes of the dominant ``A`` traffic — while every
+``dot_general`` keeps ``preferred_element_type=float32``, so the MXU
+accumulates in fp32 and the output is always fp32.  ``dtype=None``
+(default) leaves the operands untouched.
+
+The raw kernels require ``m % bm == n % bn == 0`` AND a lane-aligned
+``k`` (the RHS tile's last dimension maps to the 128-wide lane axis;
+Mosaic rejects arbitrary ``k`` on real TPU) — ``ops.py`` pads both and
+crops on return.
+
 As everywhere in this package, Mosaic's grid pipeline DMAs the next tiles
 while the MXU chews the current ones — the CUDA-stream overlap of the
 paper's Alg 3 — and ``ref.py`` holds the pure-jnp oracles the tests sweep
@@ -27,6 +40,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _cast(x: jax.Array, dtype) -> jax.Array:
+    return x if dtype is None else x.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -47,10 +64,16 @@ def _block_matvec_kernel(a_ref, q_ref, y_ref):
         a, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret", "dtype"))
 def block_matvec(A: jax.Array, Q: jax.Array, *, bm: int = 512,
-                 bn: int = 512, interpret: bool = False) -> jax.Array:
-    """``A @ Q`` tiled; A: (m, n), Q: (n, k) -> (m, k)."""
+                 bn: int = 512, interpret: bool = False,
+                 dtype=None) -> jax.Array:
+    """``A @ Q`` tiled; A: (m, n), Q: (n, k) -> (m, k) fp32.
+
+    ``dtype`` casts both operands to the sweep dtype (fp32 accumulate).
+    """
+    A, Q = _cast(A, dtype), _cast(Q, dtype)
     m, n = A.shape
     k = Q.shape[1]
     if m % bm or n % bn:
@@ -87,10 +110,16 @@ def _block_rmatvec_kernel(a_ref, y_ref, z_ref):
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret", "dtype"))
 def block_rmatvec(A: jax.Array, Y: jax.Array, *, bm: int = 512,
-                  bn: int = 512, interpret: bool = False) -> jax.Array:
-    """``A^T @ Y`` tiled; A: (m, n), Y: (m, k) -> (n, k)."""
+                  bn: int = 512, interpret: bool = False,
+                  dtype=None) -> jax.Array:
+    """``A^T @ Y`` tiled; A: (m, n), Y: (m, k) -> (n, k) fp32.
+
+    ``dtype`` casts both operands to the sweep dtype (fp32 accumulate).
+    """
+    A, Y = _cast(A, dtype), _cast(Y, dtype)
     m, n = A.shape
     k = Y.shape[1]
     if m % bm or n % bn:
@@ -112,9 +141,11 @@ def block_rmatvec(A: jax.Array, Y: jax.Array, *, bm: int = 512,
 # Fused chain: Z = A^T (A Q) — the block power step / range-finder sweep
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret", "dtype"))
 def block_gram_chain(A: jax.Array, Q: jax.Array, *, bm: int = 512,
-                     bn: int = 512, interpret: bool = False) -> jax.Array:
+                     bn: int = 512, interpret: bool = False,
+                     dtype=None) -> jax.Array:
     """``Z = A^T (A Q)`` — one full block power sweep; A: (m, n), Q: (n, k).
 
     Reuses the two multi-vector kernels back-to-back (each keeps its own
@@ -123,6 +154,13 @@ def block_gram_chain(A: jax.Array, Q: jax.Array, *, bm: int = 512,
     intermediate ``Y``, which is negligible for ``k << n``.  This is the
     per-iteration operator of the subspace iterate AND of the randomized
     range-finder warm start ``orth((A^T A)^q A^T Omega)``.
+
+    Under ``dtype=bfloat16`` the cast of ``A`` happens once here, both
+    sweeps stream the 2-byte copy, and the fp32-accumulated intermediate
+    ``Y`` is cast back down for the reverse sweep (the policy's
+    "operands low, accumulation fp32" contract).
     """
-    Y = block_matvec(A, Q, bm=bm, bn=bn, interpret=interpret)
-    return block_rmatvec(A, Y, bm=bm, bn=bn, interpret=interpret)
+    A = _cast(A, dtype)                       # cast once, both sweeps reuse
+    Y = block_matvec(A, Q, bm=bm, bn=bn, interpret=interpret, dtype=dtype)
+    return block_rmatvec(A, Y, bm=bm, bn=bn, interpret=interpret,
+                         dtype=dtype)

@@ -29,6 +29,14 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     return x
 
 
+# TPU lane width: the last dimension of every VMEM tile maps onto the
+# 128-wide lane axis, so the k (column-count) dimension of the
+# multi-vector RHS/output tiles must be padded to a multiple of 128 —
+# Mosaic rejects arbitrary k on real TPU.  Zero columns are exact for
+# every op here (they produce zero output columns, cropped on return).
+_LANE = 128
+
+
 def gram(A: jax.Array, *, bn: int = 256, bk: int = 512,
          symmetric: bool = True, interpret: bool | None = None) -> jax.Array:
     """``A^T A`` via the tiled Pallas kernel (padded); fp32 out.
@@ -58,57 +66,80 @@ def matvec(A: jax.Array, v: jax.Array, *, bm: int = 512, bn: int = 512,
 
 def deflate_rmatvec(A, U, Xv, SVtv, *, bm: int = 512, bn: int = 512,
                     interpret: bool | None = None):
+    """Fused Alg-4 reverse sweep (padded); ``k`` is lane-padded to 128.
+
+    The ``(bm, k)`` U tiles put k on the lane axis; zero columns of U
+    paired with zero SVtv entries leave the correction unchanged, and
+    the extra ``utxv`` rows they produce are zero — cropped on return.
+    """
     if interpret is None:
         interpret = not _on_tpu()
     m, n = A.shape
+    k = U.shape[1]
     Ap = _pad_to(A, (bm, bn))
-    Up = _pad_to(U, (bm, 1))
+    Up = _pad_to(U, (bm, _LANE))
     Xvp = _pad_to(Xv, (bm,))
-    t13, utxv = _dm.deflate_rmatvec(Ap, Up, Xvp, SVtv, bm=bm, bn=bn,
+    SVtvp = _pad_to(SVtv, (_LANE,))
+    t13, utxv = _dm.deflate_rmatvec(Ap, Up, Xvp, SVtvp, bm=bm, bn=bn,
                                     interpret=interpret)
-    return t13[:n], utxv
+    return t13[:n], utxv[:k]
 
 
 def block_matvec(A, Q, *, bm: int = 512, bn: int = 512,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, dtype=None):
     """``A @ Q`` via the multi-vector Pallas kernel (padded); fp32 out.
 
     Zero rows/cols of the padding contribute nothing; Q's padded rows
-    multiply padded columns of A only, so cropping is exact.
+    multiply padded columns of A only, and its zero-padded k columns
+    (lane alignment) yield zero output columns — cropping is exact.
+    ``dtype`` is the sweep dtype of the precision policy (operands cast,
+    fp32 accumulate).
     """
     if interpret is None:
         interpret = not _on_tpu()
     m, n = A.shape
+    k = Q.shape[1]
     Ap = _pad_to(A, (bm, bn))
-    Qp = _pad_to(Q, (bn, 1))
-    return _bm.block_matvec(Ap, Qp, bm=bm, bn=bn, interpret=interpret)[:m]
+    Qp = _pad_to(Q, (bn, _LANE))
+    return _bm.block_matvec(Ap, Qp, bm=bm, bn=bn, interpret=interpret,
+                            dtype=dtype)[:m, :k]
 
 
 def block_rmatvec(A, Y, *, bm: int = 512, bn: int = 512,
-                  interpret: bool | None = None):
-    """``A^T @ Y`` via the multi-vector Pallas kernel (padded); fp32 out."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    m, n = A.shape
-    Ap = _pad_to(A, (bm, bn))
-    Yp = _pad_to(Y, (bm, 1))
-    return _bm.block_rmatvec(Ap, Yp, bm=bm, bn=bn, interpret=interpret)[:n]
+                  interpret: bool | None = None, dtype=None):
+    """``A^T @ Y`` via the multi-vector Pallas kernel (padded); fp32 out.
 
-
-def block_gram_chain(A, Q, *, bm: int = 512, bn: int = 512,
-                     interpret: bool | None = None):
-    """``A^T (A Q)`` via the fused multi-vector kernel pair (padded).
-
-    Zero-padded rows/cols of ``A`` contribute nothing to either sweep, so
-    cropping the trailing ``Z`` rows back to ``n`` is exact.
+    ``Y``'s k dimension is lane-padded with zero columns (exact); see
+    ``block_matvec`` for the ``dtype`` policy.
     """
     if interpret is None:
         interpret = not _on_tpu()
     m, n = A.shape
+    k = Y.shape[1]
     Ap = _pad_to(A, (bm, bn))
-    Qp = _pad_to(Q, (bn, 1))
+    Yp = _pad_to(Y, (bm, _LANE))
+    return _bm.block_rmatvec(Ap, Yp, bm=bm, bn=bn, interpret=interpret,
+                             dtype=dtype)[:n, :k]
+
+
+def block_gram_chain(A, Q, *, bm: int = 512, bn: int = 512,
+                     interpret: bool | None = None, dtype=None):
+    """``A^T (A Q)`` via the fused multi-vector kernel pair (padded).
+
+    Zero-padded rows/cols of ``A`` contribute nothing to either sweep,
+    and zero-padded k columns (lane alignment) stay zero through both,
+    so cropping ``Z`` back to ``(n, k)`` is exact.  ``dtype`` is the
+    sweep dtype of the precision policy — under bf16 both sweeps stream
+    a 2-byte ``A`` while accumulating fp32.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = A.shape
+    k = Q.shape[1]
+    Ap = _pad_to(A, (bm, bn))
+    Qp = _pad_to(Q, (bn, _LANE))
     return _bm.block_gram_chain(Ap, Qp, bm=bm, bn=bn,
-                                interpret=interpret)[:n]
+                                interpret=interpret, dtype=dtype)[:n, :k]
 
 
 def local_attention(q, k, v, *, window: int, softcap: float | None = None,

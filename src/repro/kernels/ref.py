@@ -20,20 +20,35 @@ def matvec_ref(A: jax.Array, v: jax.Array) -> jax.Array:
     return A.astype(jnp.float32) @ v.astype(jnp.float32)
 
 
-def block_matvec_ref(A: jax.Array, Q: jax.Array) -> jax.Array:
-    """``Y = A @ Q`` in fp32 (multi-vector forward sweep)."""
-    return A.astype(jnp.float32) @ Q.astype(jnp.float32)
+def block_matvec_ref(A: jax.Array, Q: jax.Array, dtype=None) -> jax.Array:
+    """``Y = A @ Q`` (multi-vector forward sweep); fp32 accumulation.
+
+    ``dtype`` is the sweep dtype of the precision policy: operands are
+    cast to it (bf16 rounds the inputs) and the contraction pins
+    ``preferred_element_type=float32`` — the semantic ground truth the
+    Pallas kernel must match at every dtype.
+    """
+    sd = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    return jnp.matmul(A.astype(sd), Q.astype(sd),
+                      preferred_element_type=jnp.float32)
 
 
-def block_rmatvec_ref(A: jax.Array, Y: jax.Array) -> jax.Array:
-    """``Z = A^T @ Y`` in fp32 (multi-vector reverse sweep)."""
-    return A.astype(jnp.float32).T @ Y.astype(jnp.float32)
+def block_rmatvec_ref(A: jax.Array, Y: jax.Array, dtype=None) -> jax.Array:
+    """``Z = A^T @ Y`` (multi-vector reverse sweep); fp32 accumulation."""
+    sd = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    return jnp.matmul(A.astype(sd).T, Y.astype(sd),
+                      preferred_element_type=jnp.float32)
 
 
-def block_gram_chain_ref(A: jax.Array, Q: jax.Array) -> jax.Array:
-    """``Z = A^T (A Q)`` in fp32 (fused block power / range-finder sweep)."""
-    A32 = A.astype(jnp.float32)
-    return A32.T @ (A32 @ Q.astype(jnp.float32))
+def block_gram_chain_ref(A: jax.Array, Q: jax.Array, dtype=None) -> jax.Array:
+    """``Z = A^T (A Q)`` (fused block power / range-finder sweep).
+
+    Matches the kernel's mixed-precision contract: the fp32-accumulated
+    intermediate ``Y`` is cast back to the sweep dtype for the reverse
+    sweep.
+    """
+    Y = block_matvec_ref(A, Q, dtype)
+    return block_rmatvec_ref(A, Y, dtype)
 
 
 def deflate_rmatvec_ref(

@@ -14,6 +14,11 @@ Lowers ONE deflated power step (the paper's inner loop) for the paper's
   block/warm       randomized range-finder warm start: the sketch psum
                    ``A^T Omega`` plus one fused refinement — the one-off
                    cost that replaces ~10-15 cold block steps with 1-2
+  block/bf16       the block step under sweep_dtype="bfloat16": the
+                   4.3 GB/chip shard is read at 2 bytes/element by both
+                   sweeps (fp32 MXU accumulation); the (n, k) psum
+                   payload and QR stay fp32 — per-chip HBM bytes of the
+                   dominant term halve, collective bytes are unchanged
 
 Records FLOPs / bytes / per-collective bytes for §Perf — the
 paper-faithful vs beyond-paper comparison on the technique itself.
@@ -34,6 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.compat import shard_map as _shard_map  # noqa: E402
 from repro.core.dist_svd import (_deflated_chain_step,  # noqa: E402
                                  _all_gather_inv)
+from repro.core.tsvd import sweep_ops as _sweep_ops  # noqa: E402
 from repro.launch.dryrun import analyze, RESULTS_DIR  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
@@ -102,6 +108,35 @@ def lower_block_variant(mesh):
     return jax.jit(block_step).lower(*args)
 
 
+def lower_block_bf16_variant(mesh):
+    """One block power step under the mixed-precision sweep policy
+    (sweep_dtype="bfloat16"): the shard is cast once to bf16 and BOTH
+    A-sized sweeps read the 2-byte copy with fp32 MXU accumulation
+    (``preferred_element_type``); the psum payload and the QR stay fp32.
+    Halves the dominant per-chip HBM term of block/opt; the collective
+    schedule (and its bytes) is identical."""
+    axes = ("data", "model")
+    row_spec = P(axes, None)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(row_spec, P(None, None)),
+        out_specs=P(None, None))
+    def block_step_bf16(A_loc, Q):
+        # the SAME policy closures dist_tsvd runs — the lowered schedule
+        # can't drift from the driver (cast once, both sweeps read bf16,
+        # fp32 accumulation)
+        mm, rmm = _sweep_ops(A_loc, "bfloat16")
+        Z = jax.lax.psum(rmm(mm(Q)), axes)             # fp32 payload
+        Qn, _ = jnp.linalg.qr(Z)
+        return Qn
+
+    sds = lambda shape, spec: jax.ShapeDtypeStruct(
+        shape, jnp.float32, sharding=NamedSharding(mesh, spec))
+    args = (sds((M_GLOBAL, N), row_spec), sds((N, K), P(None, None)))
+    return jax.jit(block_step_bf16).lower(*args)
+
+
 def lower_block_warm_variant(mesh):
     """The range-finder warm start (method="block", warmup_q=1): sketch
     psum ``A^T Omega`` + one fused ``(n, l)`` refinement + QR.  A one-off
@@ -142,9 +177,12 @@ def main():
                   f"coll={r.get('collective_bytes_total', 0)/1e6:.1f}MB",
                   flush=True)
     # the block method's step (all K ranks per pass; divide its
-    # per-step cost by K when comparing against the per-rank variants)
-    # and the range-finder warm start (one-off; replaces ~10x the steps)
+    # per-step cost by K when comparing against the per-rank variants),
+    # its bf16-sweep twin (same collectives, half the per-chip HBM
+    # bytes on the dominant A term), and the range-finder warm start
+    # (one-off; replaces ~10x the steps)
     for tag, lower_fn in (("block/opt", lower_block_variant),
+                          ("block/bf16", lower_block_bf16_variant),
                           ("block/warm", lower_block_warm_variant)):
         print(f"[run ] svd power step {tag}", flush=True)
         lw = lower_fn(mesh)

@@ -49,33 +49,85 @@ def test_matvec_sweep(m, n):
                                rtol=1e-4, atol=1e-3)
 
 
+# k deliberately includes non-multiples of 128 (the TPU lane width):
+# the ops wrappers must zero-pad the lane dimension and crop exactly —
+# Mosaic rejects arbitrary k tiles on real TPU (regression for the
+# missing-pad bug).
 @pytest.mark.parametrize("m,n,k", [(256, 128, 4), (300, 200, 8),
-                                   (128, 128, 64), (512, 130, 16)])
+                                   (128, 128, 64), (512, 130, 16),
+                                   (256, 128, 130), (128, 256, 200)])
 def test_block_matvec_sweep(m, n, k):
     rng = np.random.default_rng(m + n + k)
     A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
     Q = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
     Y = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     got = block_matvec(A, Q, bm=128, bn=128)
+    assert got.shape == (m, k)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(block_matvec_ref(A, Q)),
                                rtol=1e-3, atol=1e-2)
     got = block_rmatvec(A, Y, bm=128, bn=128)
+    assert got.shape == (n, k)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(block_rmatvec_ref(A, Y)),
                                rtol=1e-3, atol=1e-2)
 
 
 @pytest.mark.parametrize("m,n,k", [(256, 128, 4), (300, 200, 8),
-                                   (512, 130, 16)])
+                                   (512, 130, 16), (256, 128, 130)])
 def test_block_gram_chain_sweep(m, n, k):
     """Fused ``A^T (A Q)`` == oracle (block power / warm-start sweep)."""
     rng = np.random.default_rng(m * 7 + n + k)
     A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
     Q = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
     got = block_gram_chain(A, Q, bm=128, bn=128)
+    assert got.shape == (n, k)
     want = block_gram_chain_ref(A, Q)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=5e-2)
+
+
+@pytest.mark.parametrize("m,n,k", [(256, 128, 4), (300, 200, 130)])
+@pytest.mark.parametrize("dtype", ["bfloat16", None])
+def test_block_kernels_sweep_dtype(m, n, k, dtype):
+    """The kernels' mixed-precision contract (sweep_dtype operands, fp32
+    accumulation) matches the dtype-aware oracles — including with the
+    lane-padded k.  Output is always fp32."""
+    rng = np.random.default_rng(m + 13 * n + k)
+    A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    Q = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    for op, ref, rhs in ((block_matvec, block_matvec_ref, Q),
+                         (block_rmatvec, block_rmatvec_ref, Y),
+                         (block_gram_chain, block_gram_chain_ref, Q)):
+        got = op(A, rhs, bm=128, bn=128, dtype=dtype)
+        want = ref(A, rhs, dtype)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-2)
+    # bf16 oracle differs from fp32 by the input rounding, not more:
+    if dtype == "bfloat16":
+        rel = (np.linalg.norm(np.asarray(block_gram_chain_ref(A, Q, dtype))
+                              - np.asarray(block_gram_chain_ref(A, Q)))
+               / np.linalg.norm(np.asarray(block_gram_chain_ref(A, Q))))
+        assert 1e-5 < rel < 5e-2
+
+
+def test_deflate_rmatvec_lane_padded_k():
+    """Regression: deflate_rmatvec's (bm, k) U tiles put k on the lane
+    axis; the wrapper must pad k to 128 and crop utxv back."""
+    rng = np.random.default_rng(77)
+    m, n, k = 256, 128, 130          # k > 128 and not a lane multiple
+    A = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    U = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    Xv = matvec_ref(A, jnp.asarray(rng.normal(size=(n,)).astype(np.float32)))
+    SVtv = jnp.asarray(rng.normal(size=(k,)).astype(np.float32))
+    t13, utxv = deflate_rmatvec(A, U, Xv, SVtv, bm=128, bn=128)
+    t13r, utxvr = deflate_rmatvec_ref(A, U, Xv, SVtv)
+    assert utxv.shape == (k,)
+    np.testing.assert_allclose(np.asarray(t13), np.asarray(t13r),
+                               rtol=1e-3, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(utxv), np.asarray(utxvr),
                                rtol=1e-3, atol=5e-2)
 
 
