@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SyntheticSparseMatrix, oom_tsvd, sparse_tsvd, tsvd)
+from repro.core import SyntheticSparseMatrix, svd
 
 
 def _lowrank(rng, m, n, spectrum):
@@ -32,8 +32,7 @@ def run(fast: bool = True):
     rows = []
     for method in ("gram", "gramfree"):
         t0 = time.time()
-        r = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method=method,
-                 eps=1e-10, max_iters=800)
+        r = svd(jnp.asarray(A), k, method=method, eps=1e-10, max_iters=800)
         jax.block_until_ready(r.S)
         dt = time.time() - t0
         err = float(np.max(np.abs(np.asarray(r.S) - s_np) / s_np))
@@ -41,7 +40,7 @@ def run(fast: bool = True):
         rows.append((f"serial/{method}", err, orth, dt))
 
     t0 = time.time()
-    r = oom_tsvd(A, k, n_blocks=4, eps=1e-10, max_iters=800)
+    r = svd(A, k, method="gramfree", n_blocks=4, eps=1e-10, max_iters=800)
     dt = time.time() - t0
     err = float(np.max(np.abs(np.asarray(r.S) - s_np) / s_np))
     orth = float(np.abs(np.asarray(r.V.T @ r.V) - np.eye(k)).max())
@@ -50,8 +49,8 @@ def run(fast: bool = True):
     sp = SyntheticSparseMatrix(m=512, n=128, nnz_per_row=6, seed=2, chunk=64)
     sd = np.linalg.svd(sp.row_block_dense(0, 512), compute_uv=False)[:4]
     t0 = time.time()
-    U, S, V = sparse_tsvd(sp, 4, eps=1e-12, max_iters=1500,
-                          block_rows=128)[:3]
+    U, S, V = svd(sp, 4, method="gramfree", eps=1e-12, max_iters=1500,
+                  block_rows=128)[:3]
     dt = time.time() - t0
     err = float(np.max(np.abs(S - sd) / sd))
     orth = float(np.abs(V.T @ V - np.eye(4)).max())

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CountingHostMatrix, oom_tsvd, tsvd
+from repro.core import CountingHostMatrix, svd
 
 
 def _lowrank(rng, m, n, spectrum):
@@ -55,8 +55,7 @@ def run(fast: bool = True, smoke: bool = False):
     for method, iters in (("block", 100), ("gramfree", defl_cap)):
         op = CountingHostMatrix(A, 2)
         t0 = time.time()
-        res = oom_tsvd(None, k, op=op, method=method, eps=1e-6,
-                       max_iters=iters)
+        res = svd(op, k, method=method, eps=1e-6, max_iters=iters)
         wall = time.time() - t0
         err = float(np.max(np.abs(np.asarray(res.S) - s_np) / s_np))
         results[method] = op.passes
@@ -77,12 +76,11 @@ def run(fast: bool = True, smoke: bool = False):
           f"{'max rel sigma err':>18}")
     Aj = jnp.asarray(A)
     for method, eps, iters in (("block", 1e-6, 200), ("gram", 1e-6, 200)):
-        r = tsvd(Aj, k, jax.random.PRNGKey(0), method=method, eps=eps,
-                 max_iters=iters)  # compile
+        r = svd(Aj, k, method=method, eps=eps, max_iters=iters,
+                seed=0)  # compile
         jax.block_until_ready(r.S)
         t0 = time.time()
-        r = tsvd(Aj, k, jax.random.PRNGKey(1), method=method, eps=eps,
-                 max_iters=iters)
+        r = svd(Aj, k, method=method, eps=eps, max_iters=iters, seed=1)
         jax.block_until_ready(r.S)
         wall = time.time() - t0
         recon = float(jnp.linalg.norm(

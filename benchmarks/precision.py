@@ -39,9 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import make_mesh
-from repro.core import (DenseStreamOperator, dist_tsvd, oom_tsvd,
-                        sparse_tsvd, tsvd)
-from repro.core.tsvd import sweep_ops
+from repro.core import DenseStreamOperator, svd, sweep_ops
 
 try:  # the spectra are owned by the warm-start benchmark (shared problems)
     from benchmarks.warmstart import (OVERSAMPLE, clustered_spectrum,
@@ -59,17 +57,14 @@ EPS = {"float32": 1e-6, "bfloat16": 1e-4}
 
 
 def _measure_paths(A, k, dtype, *, max_iters=300):
-    """Yield (path, result) for all four drivers at one sweep dtype."""
-    Aj = jnp.asarray(A)
+    """Yield (path, result) for all four svd() backends at one dtype."""
     mesh = make_mesh((1,), ("data",))
-    op = DenseStreamOperator(A)
-    eps = EPS[dtype]
-    kw = dict(method="block", eps=eps, max_iters=max_iters,
-              sweep_dtype=dtype)
-    yield "serial", tsvd(Aj, k, jax.random.PRNGKey(0), **kw)
-    yield "dist", dist_tsvd(Aj, k, mesh, **kw)
-    yield "oom", oom_tsvd(A, k, n_blocks=4, **kw)
-    yield "sparse", sparse_tsvd(op, k, **kw)
+    kw = dict(method="block", eps=EPS[dtype], max_iters=max_iters,
+              sweep_dtype=dtype, n_blocks=4)
+    yield "serial", svd(jnp.asarray(A), k, **kw)
+    yield "dist", svd(jnp.asarray(A), k, mesh=mesh, **kw)
+    yield "oom", svd(A, k, **kw)
+    yield "sparse", svd(DenseStreamOperator(A), k, **kw)
 
 
 def _errors(A, res, s_np):

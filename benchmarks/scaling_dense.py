@@ -64,7 +64,7 @@ def modeled_times(node_counts=(1, 2, 4, 8, 16, 32)):
 _CHILD = r"""
 import time, numpy as np, jax, jax.numpy as jnp
 from repro.compat import make_mesh as compat_make_mesh
-from repro.core import dist_tsvd
+from repro.core import svd
 results = {}
 rng = np.random.default_rng(0)
 m, n, k = 1024, 256, 8
@@ -72,12 +72,12 @@ A = rng.normal(size=(m, n)).astype(np.float32)
 for N in (1, 2, 4, 8):
     mesh = compat_make_mesh((N,), ("data",))
     # warmup/compile
-    r = dist_tsvd(jnp.asarray(A), k, mesh, method="gram", force_iters=True,
-                  max_iters=5)
+    r = svd(jnp.asarray(A), k, mesh=mesh, method="gram", force_iters=True,
+            max_iters=5)
     jax.block_until_ready(r.S)
     t0 = time.time()
-    r = dist_tsvd(jnp.asarray(A), k, mesh, method="gram", force_iters=True,
-                  max_iters=20)
+    r = svd(jnp.asarray(A), k, mesh=mesh, method="gram", force_iters=True,
+            max_iters=20)
     jax.block_until_ready(r.S)
     results[N] = time.time() - t0
 import json; print("RESULT:" + json.dumps(results))

@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from benchmarks import hw
-from repro.core import SyntheticSparseMatrix, sparse_tsvd
+from repro.core import SyntheticSparseMatrix, svd
 
 PAPER_SIDE = 33_554_432
 PAPER_NNZ_PER_ROW = 33          # density ~1e-6
@@ -55,8 +55,8 @@ def measured_small(fast: bool = True):
     m, n = (8192, 2048) if fast else (131072, 32768)
     sp = SyntheticSparseMatrix(m=m, n=n, nnz_per_row=8, seed=0)
     t0 = time.time()
-    U, S, V = sparse_tsvd(sp, 2, eps=1e-8, max_iters=30,
-                          block_rows=2048)[:3]
+    U, S, V = svd(sp, 2, method="gramfree", eps=1e-8, max_iters=30,
+                  block_rows=2048)[:3]
     dt = time.time() - t0
     per_iter = dt / (2 * 30)
     return {"m": m, "n": n, "nnz": sp.nnz, "sec_total": dt,

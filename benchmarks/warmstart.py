@@ -11,15 +11,16 @@ oversampling window, ~10-15 cold sweeps collapse to 1-2.
 Measured here as *iterations and passes over A to convergence* on two
 spectra — a separated one (decaying tail past rank k) and a clustered
 one (a near-flat cluster straddling the rank cut, the cold method's
-worst case) — across all four t-SVD paths:
+worst case) — through the unified ``svd()`` front door on all four
+operator backends:
 
-  serial   tsvd(method="block")                  (core/tsvd.py)
-  dist     dist_tsvd(method="block"), 1-dev mesh (core/dist_svd.py;
-           iteration counts are device-count invariant — the collective
-           schedule itself is lowered in launch/svd_dryrun.py block/warm)
-  oom      oom_tsvd(method="block"), streamed host blocks (core/oom.py)
-  sparse   sparse_tsvd(method="block") on a DenseStreamOperator with the
-           prescribed spectrum (core/sparse.py)
+  dense         svd(jax array)                 (DenseOperator)
+  sharded       svd(..., mesh=mesh), 1-dev mesh (ShardedOperator;
+                iteration counts are device-count invariant — the
+                collective schedule itself is lowered in
+                launch/svd_dryrun.py block/warm)
+  hostblocked   svd(numpy array), streamed host blocks
+  sparsestream  svd(DenseStreamOperator) with the prescribed spectrum
 
 Run: ``PYTHONPATH=src python -m benchmarks.run --only warmstart``
      ``PYTHONPATH=src python benchmarks/warmstart.py --smoke``  (CI job)
@@ -28,13 +29,11 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import make_mesh
-from repro.core import (DenseStreamOperator, dist_tsvd, oom_tsvd,
-                        sparse_tsvd, tsvd)
+from repro.core import DenseStreamOperator, svd
 
 OVERSAMPLE = 8
 
@@ -72,34 +71,24 @@ def spectra(k):
 
 
 def measure(A, k, *, eps=1e-6, max_iters=300):
-    """(path, cold (iters, passes), warm (iters, passes)) per path."""
-    Aj = jnp.asarray(A)
+    """(path, cold (iters, passes), warm (iters, passes)) per path.
+
+    One config, four operator backends — the only thing that changes per
+    row is what ``svd()`` is handed (its input-type dispatch).
+    """
     mesh = make_mesh((1,), ("data",))
-    op = DenseStreamOperator(A)
+    inputs = (("serial", jnp.asarray(A), {}),
+              ("dist", jnp.asarray(A), {"mesh": mesh}),
+              ("oom", A, {}),
+              ("sparse", DenseStreamOperator(A), {}))
 
-    def serial(q):
-        r = tsvd(Aj, k, jax.random.PRNGKey(0), method="block", eps=eps,
-                 max_iters=max_iters, warmup_q=q, oversample=OVERSAMPLE)
+    def run(target, extra, q):
+        r = svd(target, k, method="block", eps=eps, max_iters=max_iters,
+                warmup_q=q, oversample=OVERSAMPLE, n_blocks=4, **extra)
         return int(r.iters[0]), int(r.passes_over_A)
 
-    def dist(q):
-        r = dist_tsvd(Aj, k, mesh, method="block", eps=eps,
-                      max_iters=max_iters, warmup_q=q, oversample=OVERSAMPLE)
-        return int(r.iters[0]), int(r.passes_over_A)
-
-    def oom(q):
-        r = oom_tsvd(A, k, n_blocks=4, method="block", eps=eps,
-                     max_iters=max_iters, warmup_q=q, oversample=OVERSAMPLE)
-        return int(r.iters[0]), int(r.passes_over_A)
-
-    def sparse(q):
-        r = sparse_tsvd(op, k, method="block", eps=eps, max_iters=max_iters,
-                        warmup_q=q, oversample=OVERSAMPLE)
-        return int(r.iters[0]), int(r.passes_over_A)
-
-    for name, fn in (("serial", serial), ("dist", dist), ("oom", oom),
-                     ("sparse", sparse)):
-        yield name, fn(0), fn(1)
+    for name, target, extra in inputs:
+        yield name, run(target, extra, 0), run(target, extra, 1)
 
 
 def run(fast: bool = True, smoke: bool = False):

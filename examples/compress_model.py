@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import oom_tsvd, tsvd
+from repro.compat import tree_flatten_with_path
+from repro.core import svd
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -29,7 +30,7 @@ def main():
                       vocab_size=4096, dtype="float32", scan_layers=False)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
 
-    flat, treedef = jax.tree.flatten_with_path(params)
+    flat, treedef = tree_flatten_with_path(params)
     total_before = total_after = 0
     print(f"{'weight':<44} {'shape':>16} {'rank':>5} {'rel err':>9} {'ratio':>7}")
     new_leaves = []
@@ -44,14 +45,13 @@ def main():
             new_leaves.append(w)
             total_after += arr.size
             continue
-        if mat.shape[0] >= 4096:
-            # largest matrices go through the out-of-core path — this is
-            # the drop-in that works when a weight exceeds device memory
-            res = oom_tsvd(mat, args.rank, n_blocks=4, eps=1e-6,
-                           max_iters=50)
-        else:
-            res = tsvd(jnp.asarray(mat), args.rank, jax.random.PRNGKey(0),
-                       method="gramfree", eps=1e-6, max_iters=50)
+        # svd() dispatches on the input type: the largest matrices go in
+        # as host numpy arrays (out-of-core streaming — the drop-in that
+        # works when a weight exceeds device memory), the rest as device
+        # arrays (serial block iteration, all ranks per pass).
+        target = mat if mat.shape[0] >= 4096 else jnp.asarray(mat)
+        res = svd(target, args.rank, method="block", n_blocks=4,
+                  eps=1e-6, max_iters=50)
         rec = (np.asarray(res.U) * np.asarray(res.S)) @ np.asarray(res.V).T
         err = np.linalg.norm(mat - rec) / np.linalg.norm(mat)
         lr_size = args.rank * (mat.shape[0] + mat.shape[1] + 1)

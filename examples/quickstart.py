@@ -1,16 +1,18 @@
-"""Quickstart: truncated SVD five ways (serial gram / chain / block,
-out-of-core, distributed).
+"""Quickstart: truncated SVD five ways through the ONE front door.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Runs on any machine; the distributed variant uses however many devices
-jax sees (1 is fine — the same code scales to the 256-chip mesh).
+``repro.core.svd(A, k, ...)`` dispatches on the input type — the same
+call runs serially, out-of-core, or mesh-distributed depending on what
+you hand it.  Runs on any machine; the distributed variant uses however
+many devices jax sees (1 is fine — the same code scales to the 256-chip
+mesh).
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (dist_tsvd, oom_tsvd, relative_error, tsvd)
+from repro.core import SVDConfig, relative_error, svd
 from repro.launch.mesh import make_host_mesh
 
 
@@ -26,22 +28,20 @@ def main():
 
     print(f"A: {m}x{n}, want top-{k} of spectrum {spectrum[:k]}")
 
-    # 1) serial power-method t-SVD (paper Algs 1+2)
-    res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), eps=1e-9,
-               max_iters=500)
+    # 1) serial power-method t-SVD (paper Algs 1+2) — deflation oracle
+    res = svd(jnp.asarray(A), k, method="gram", eps=1e-9, max_iters=500)
     print("\n[serial/gram]   sigma:", np.round(np.asarray(res.S), 3))
     print("               rel reconstruction err:",
           float(relative_error(jnp.asarray(A), res)))
 
     # 2) gram-free chain (paper Alg 4 — the sparse-safe path)
-    res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method="gramfree",
-               eps=1e-9, max_iters=500)
+    res = svd(jnp.asarray(A), k, method="gramfree", eps=1e-9, max_iters=500)
     print("[serial/chain]  sigma:", np.round(np.asarray(res.S), 3))
 
-    # 3) block subspace iteration — all k ranks per pass over A
-    #    (k x fewer sweeps than deflation; see benchmarks/block_vs_deflation)
-    res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method="block",
-               eps=1e-8, max_iters=300)
+    # 3) block subspace iteration — the default: all k ranks per pass
+    #    over A (k x fewer sweeps than deflation; see
+    #    benchmarks/block_vs_deflation)
+    res = svd(jnp.asarray(A), k, eps=1e-8, max_iters=300)
     print("[serial/block]  sigma:", np.round(np.asarray(res.S), 3),
           f"({int(res.iters[0])} block iterations, "
           f"{int(res.passes_over_A)} passes over A)")
@@ -49,25 +49,28 @@ def main():
     # 3b) ... with the randomized range-finder warm start: the sketch
     #     orth((A^T A) A^T Omega) replaces iterations — a few here (this
     #     demo spectrum is nearly flat), 6-30x on spectra with a decaying
-    #     tail (see benchmarks/warmstart.py)
-    res = tsvd(jnp.asarray(A), k, jax.random.PRNGKey(0), method="block",
-               eps=1e-8, max_iters=300, warmup_q=1)
+    #     tail (see benchmarks/warmstart.py).  A config object carries
+    #     the knobs; keyword overrides work too.
+    cfg = SVDConfig(method="block", eps=1e-8, max_iters=300, warmup_q=1)
+    res = svd(jnp.asarray(A), k, config=cfg)
     print("[block+warm]    sigma:", np.round(np.asarray(res.S), 3),
           f"({int(res.iters[0])} block iterations, "
           f"{int(res.passes_over_A)} passes over A)")
 
-    # 4) out-of-core: A stays on host, streamed in 8 blocks (degree-1 OOM)
-    res = oom_tsvd(A, k, n_blocks=8, eps=1e-9, max_iters=500)
+    # 4) out-of-core: a NUMPY array stays on host, streamed in 8 blocks
+    #    (degree-1 OOM) — same call, different input type
+    res = svd(A, k, method="gramfree", n_blocks=8, eps=1e-9, max_iters=500)
     print("[out-of-core]   sigma:", np.round(np.asarray(res.S), 3))
 
     # 4b) out-of-core block: each host block H2D-copied ONCE per iteration
-    res = oom_tsvd(A, k, n_blocks=8, eps=1e-8, max_iters=300,
-                   method="block")
-    print("[oom/block]     sigma:", np.round(np.asarray(res.S), 3))
+    res = svd(A, k, method="block", n_blocks=8, eps=1e-8, max_iters=300)
+    print("[oom/block]     sigma:", np.round(np.asarray(res.S), 3),
+          f"(backend={res.backend}, "
+          f"{res.bytes_per_pass/1e6:.1f} MB H2D per pass)")
 
-    # 5) distributed across whatever devices exist
+    # 5) distributed across whatever devices exist: pass a mesh
     mesh = make_host_mesh()
-    res = dist_tsvd(jnp.asarray(A), k, mesh, eps=1e-9, max_iters=500)
+    res = svd(jnp.asarray(A), k, mesh=mesh, eps=1e-8, max_iters=300)
     print(f"[distributed x{jax.device_count()}] sigma:",
           np.round(np.asarray(res.S), 3))
 

@@ -1,0 +1,70 @@
+"""One decomposition, three execution regimes, ONE call.
+
+    PYTHONPATH=src python examples/unified_api.py
+
+Builds a matrix with a prescribed spectrum and factorizes it through
+``repro.core.svd`` with the SAME ``SVDConfig`` on three different input
+types — an in-memory jax array, a host-resident numpy array (streamed
+out-of-core in blocks), and a streamed operator (the sparse backend's
+surface) — then prints the per-backend accounting side by side.  The
+solver logic is written once against the ``LinearOperator`` protocol
+(``core/operator.py``); the only thing that changes per row is what the
+front door is handed.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (DenseStreamOperator, SVDConfig,
+                        SyntheticSparseMatrix, svd)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    m, n, k = 512, 192, 8
+    U, _, Vt = np.linalg.svd(rng.normal(size=(m, n)).astype(np.float32),
+                             full_matrices=False)
+    spectrum = np.zeros(n, np.float32)
+    spectrum[:2 * k] = np.linspace(20, 2, 2 * k)
+    A = (U * spectrum) @ Vt
+
+    # One config for every backend: block subspace iteration with a
+    # range-finder warm start and bounded host blocking.
+    cfg = SVDConfig(method="block", eps=1e-8, max_iters=300, warmup_q=1,
+                    n_blocks=4)
+
+    inputs = [
+        ("dense (jax array)", jnp.asarray(A)),
+        ("out-of-core (numpy array)", A),
+        ("streamed operator", DenseStreamOperator(A)),
+    ]
+
+    print(f"A: {m}x{n}, top-{k} of spectrum {spectrum[:k]}")
+    print(f"\n{'input':<28} {'backend':<14} {'iters':>5} {'passes':>7} "
+          f"{'MB/pass':>8} {'conv':>5} {'max sigma err':>14}")
+    for name, target in inputs:
+        res = svd(target, k, config=cfg)
+        err = float(np.max(np.abs(np.asarray(res.S) - spectrum[:k])
+                           / spectrum[:k]))
+        print(f"{name:<28} {res.backend:<14} {int(res.iters[0]):>5} "
+              f"{int(res.passes_over_A):>7} "
+              f"{res.bytes_per_pass / 1e6:>8.2f} {str(res.converged):>5} "
+              f"{err:>14.2e}")
+
+    # A genuinely sparse input rides the same front door: the procedural
+    # operator below never materializes the matrix (its nonzeros are
+    # generated per row block on demand), so the same call scales to
+    # petabyte dense-equivalent sizes.  A random sparse spectrum is
+    # tightly clustered, so the demo loosens eps and widens the sketch —
+    # the rank gap, not the backend, sets the convergence rate.
+    sp = SyntheticSparseMatrix(m=4096, n=512, nnz_per_row=8, seed=1)
+    res = svd(sp, 4, config=cfg.replace(eps=1e-4, oversample=28))
+    print(f"\nsparse {sp.m}x{sp.n} (density {sp.density:.1e}, dense-equiv "
+          f"{sp.dense_bytes / 1e6:.0f} MB, nnz stream "
+          f"{res.bytes_per_pass / 1e6:.1f} MB/pass):")
+    print("  sigma:", np.round(np.asarray(res.S), 3),
+          f" backend={res.backend}, {int(res.passes_over_A)} passes, "
+          f"converged={res.converged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,20 @@
-"""repro.core — the paper's contribution: distributed out-of-memory t-SVD."""
+"""repro.core — the paper's contribution: distributed out-of-memory t-SVD.
+
+The public API is the single front door::
+
+    from repro.core import svd, SVDConfig
+    res = svd(A, k, method="block", warmup_q=1)          # SVDResult
+
+dispatching on the input type (jax array / array + mesh / numpy array /
+streamed sparse operator / custom ``LinearOperator``) — see
+``core/svd.py``.  The four legacy entrypoints (``tsvd``, ``dist_tsvd``,
+``oom_tsvd``, ``sparse_tsvd``) are deprecated shims onto it.
+"""
+from repro.core.config import (  # noqa: F401
+    SVDConfig,
+    SVDResult,
+    key_to_seed,
+)
 from repro.core.precision import (  # noqa: F401
     SWEEP_DTYPES,
     resolve_sweep_dtype,
@@ -9,12 +25,19 @@ from repro.core.tsvd import (  # noqa: F401
     svd_1d,
     power_iterate_gram,
     power_iterate_chain,
-    block_power_iterate,
-    range_finder_q0,
+    sweep_ops,
     warm_start_width,
     rayleigh_ritz,
+    rayleigh_ritz_from_W,
     reconstruct,
     relative_error,
+)
+from repro.core.operator import (  # noqa: F401
+    LinearOperator,
+    DenseOperator,
+    ShardedOperator,
+    HostBlockedOperator,
+    SparseStreamOperator,
 )
 from repro.core.dist_svd import DistTSVDResult, dist_tsvd  # noqa: F401
 from repro.core.oom import (  # noqa: F401
@@ -39,3 +62,52 @@ from repro.core.sparse import (  # noqa: F401
     SyntheticSparseMatrix,
     sparse_tsvd,
 )
+from repro.core.svd import svd  # noqa: F401
+
+__all__ = [
+    # the front door + its types
+    "svd",
+    "SVDConfig",
+    "SVDResult",
+    "key_to_seed",
+    # the operator protocol + adapters
+    "LinearOperator",
+    "DenseOperator",
+    "ShardedOperator",
+    "HostBlockedOperator",
+    "SparseStreamOperator",
+    # shared numerical helpers
+    "SWEEP_DTYPES",
+    "resolve_sweep_dtype",
+    "sweep_ops",
+    "warm_start_width",
+    "rayleigh_ritz",
+    "rayleigh_ritz_from_W",
+    "reconstruct",
+    "relative_error",
+    "svd_1d",
+    "power_iterate_gram",
+    "power_iterate_chain",
+    # blocked/streamed data structures
+    "HostBlockedMatrix",
+    "CountingHostMatrix",
+    "SyntheticSparseMatrix",
+    "DenseStreamOperator",
+    "blocked_gram",
+    "tiled_gram",
+    "blocked_deflated_matvec",
+    "Partition",
+    "make_partition",
+    "BatchPlan",
+    "make_batch_plan",
+    "symmetric_tasks",
+    # deprecated legacy entrypoints + result-type aliases
+    "tsvd",
+    "dist_tsvd",
+    "oom_tsvd",
+    "sparse_tsvd",
+    "TSVDResult",
+    "DistTSVDResult",
+    "OOMResult",
+    "SparseTSVDResult",
+]

@@ -1,0 +1,206 @@
+"""Unified configuration + result types for the single SVD front door.
+
+Every knob the four execution regimes (in-memory, distributed,
+out-of-core, sparse-streamed) used to spell differently lives here,
+validated in ONE place:
+
+* ``SVDConfig`` — a frozen dataclass holding every solver knob.  Adding
+  the next knob is a one-file change: add the field + its validation
+  here, read it in the shared driver (``core/svd.py``) or the operator
+  adapter that needs it (``core/operator.py``).  Fields are hashable
+  Python scalars so a config can be used as a jit-static value.
+* ``SVDResult`` — the one result tuple all backends return.  The first
+  five fields are exactly the legacy result-tuple fields (``U, S, V,
+  iters, passes_over_A``), so code written against the old per-backend
+  NamedTuples keeps working unchanged (including ``res[:3]`` slicing);
+  the new fields add the byte accounting and dispatch metadata.
+
+Legacy-spelling notes (what this module unifies — see the shims in
+``tsvd``/``dist_svd``/``oom``/``sparse`` for the old surfaces):
+
+* RNG: one integer ``seed`` everywhere.  The serial path used to take a
+  jax PRNG ``key``; ``key_to_seed`` recovers the integer from a
+  ``PRNGKey(s)`` so the shim translation is exact.
+* ``force_iters`` now exists on every backend (the OOM and sparse
+  entrypoints silently lacked it).
+* one documented default ``method="block"`` — the recommended solver
+  (``tsvd`` used to default to ``"gram"``, the other three to
+  ``"gramfree"``; the deprecated shims pin their old defaults).
+* blocking: ``n_blocks`` (host-block count, OOM staging / in-shard
+  deflation batching) and ``block_rows`` (rows per generated block,
+  sparse streaming) both live here instead of being per-entrypoint
+  spellings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core.precision import SWEEP_DTYPES, resolve_sweep_dtype
+
+METHODS = ("gram", "gramfree", "block")
+
+#: backend tags reported in ``SVDResult.backend``
+BACKENDS = ("dense", "sharded", "hostblocked", "sparsestream", "operator")
+
+
+@dataclasses.dataclass(frozen=True)
+class SVDConfig:
+    """All solver knobs, validated once.
+
+    ``method``       "gram" | "gramfree" (rank-one deflation, the paper's
+                     Alg 1/2/4) or "block" (block subspace iteration —
+                     the default and the recommended solver: every pass
+                     over ``A`` advances all k ranks).
+    ``eps``          convergence tolerance (subspace gap for "block",
+                     ``|v . v1| >= 1 - eps`` for deflation).
+    ``max_iters``    iteration cap (per rank for deflation).
+    ``force_iters``  disable the convergence test (the paper's scaling-
+                     benchmark mode) — run exactly ``max_iters``.
+    ``warmup_q``     block only: randomized range-finder warm start
+                     ``Q0 = orth((A^T A)^q A^T Omega)`` (0 = cold start).
+    ``oversample``   block only: extra sketch columns p (iterate width
+                     ``l = k + p``, truncated at extraction).
+    ``sweep_dtype``  block only: "float32" | "bfloat16" operand dtype of
+                     the A-sized sweeps (fp32 accumulation; see
+                     ``core/precision.py``).
+    ``n_blocks``     host-block count for the out-of-core backend (H2D
+                     staging granularity) and in-shard deflation batching
+                     on the sharded backend.  The default (4) is tuned
+                     for OOM staging; pass ``n_blocks=1`` on the sharded
+                     deflation path for the unbatched legacy step (the
+                     legacy ``dist_tsvd`` shim pins 1, so its results
+                     are unchanged; batching only reorders the in-shard
+                     FP accumulation).  The block method has no batching
+                     here — its step is one fused matmat.
+    ``block_rows``   rows per generated block on the sparse-streamed
+                     backend.
+    ``seed``         the one RNG convention: an integer seed.
+    ``faithful``     sharded deflation only: the paper's collective
+                     schedule (three all-reduces per step) instead of the
+                     fused single-collective step.
+    """
+
+    method: str = "block"
+    eps: float = 1e-6
+    max_iters: int = 200
+    force_iters: bool = False
+    warmup_q: int = 0
+    oversample: int = 8
+    sweep_dtype: str = "float32"
+    n_blocks: int = 4
+    block_rows: int = 1 << 16
+    seed: int = 0
+    faithful: bool = False
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected "
+                             f"one of {METHODS}")
+        if self.eps <= 0:
+            raise ValueError(f"eps must be > 0, got {self.eps}")
+        if self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if self.warmup_q < 0:
+            raise ValueError(f"warmup_q must be >= 0, got {self.warmup_q}")
+        if self.oversample < 0:
+            raise ValueError(
+                f"oversample must be >= 0, got {self.oversample}")
+        if self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+        if self.block_rows < 1:
+            raise ValueError(
+                f"block_rows must be >= 1, got {self.block_rows}")
+        if self.warmup_q and self.method != "block":
+            raise ValueError("warmup_q > 0 requires method='block' "
+                             "(deflation has no block iterate to "
+                             "warm-start)")
+        # canonicalize the dtype spelling (accepts jnp/np dtypes too)
+        sd_name = resolve_sweep_dtype(self.sweep_dtype).name
+        object.__setattr__(self, "sweep_dtype", sd_name)
+        if sd_name != SWEEP_DTYPES[0] and self.method != "block":
+            raise ValueError("sweep_dtype != 'float32' requires "
+                             "method='block' (only the block sweeps have "
+                             "the mixed-precision policy; deflation stays "
+                             "the fp32 oracle)")
+        object.__setattr__(self, "seed", int(self.seed))
+
+    def replace(self, **overrides: Any) -> "SVDConfig":
+        """New config with ``overrides`` applied (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+
+class SVDResult(NamedTuple):
+    """Unified SVD result: ``A ~= U @ diag(S) @ V.T``.
+
+    The first five fields are the legacy result-tuple fields, in the
+    legacy order, so both attribute access (``res.S``) and positional
+    slicing (``U, S, V = res[:3]``) written against the old per-backend
+    NamedTuples keep working.
+    """
+
+    U: Any                 # (m, k) left factor (row-sharded on "sharded")
+    S: Any                 # (k,) singular values, descending
+    V: Any                 # (n, k) right factor
+    iters: Any             # (k,) iterations per rank (shared for "block")
+    passes_over_A: Any     # A-sized operand sweeps / streams of the data
+    bytes_per_pass: int    # bytes one pass moves at the configured dtype
+    converged: bool        # criterion met before max_iters (False under
+    #                        force_iters: the test is disabled)
+    backend: str           # one of BACKENDS
+
+
+def key_to_seed(key) -> int:
+    """Recover the integer seed convention from a legacy jax PRNG key.
+
+    ``PRNGKey(s)`` packs ``s`` into (hi, lo) uint32 words; folding them
+    back gives the full 64-bit value, so ``seed_to_key(key_to_seed(k))``
+    reproduces ``k`` exactly — including keys derived via ``split``/
+    ``fold_in`` whose hi word has the top bit set (the deprecated
+    ``tsvd`` shim's exact-translation contract).  ``None`` maps to the
+    legacy default key ``PRNGKey(0)`` -> 0.  Integers pass through.
+    """
+    if key is None:
+        return 0
+    if isinstance(key, (int, np.integer)):
+        return int(key)
+    seed = 0
+    for w in _key_words(key).ravel().tolist():
+        seed = (seed << 32) | int(w)
+    return seed
+
+
+def _key_words(key) -> np.ndarray:
+    """The raw uint32 words of a jax PRNG key (typed or legacy raw)."""
+    import jax
+
+    try:
+        return np.asarray(jax.random.key_data(key))
+    except (AttributeError, TypeError):  # raw uint32 key array
+        return np.asarray(key)
+
+
+def seed_to_key(seed: int):
+    """The inverse: the jax PRNG key whose packed words equal ``seed``.
+
+    For seeds below 2**32 under the default (2-word threefry) impl this
+    IS ``PRNGKey(seed)``; anything wider — keys recovered from
+    ``split``/``fold_in`` by ``key_to_seed``, or 4-word rbg-impl keys —
+    is rebuilt word-for-word at the active impl's key width
+    (``PRNGKey`` itself silently truncates wide seeds to 32 bits when
+    x64 is disabled, so it cannot be used there).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n_words = _key_words(jax.random.PRNGKey(0)).size
+    if n_words == 2 and 0 <= seed < (1 << 32):
+        return jax.random.PRNGKey(seed)
+    data = np.array([(seed >> (32 * (n_words - 1 - i))) & 0xFFFFFFFF
+                     for i in range(n_words)], np.uint32)
+    try:
+        return jax.random.wrap_key_data(jnp.asarray(data))
+    except AttributeError:  # old jax: raw uint32 arrays are the format
+        return jnp.asarray(data)

@@ -1,4 +1,4 @@
-"""Distributed truncated SVD over a named mesh axis (paper Algs 3 & 4).
+"""Distributed deflation t-SVD engine over a named mesh axis (Algs 3 & 4).
 
 The paper's N-GPU layout maps 1:1 onto a JAX mesh axis:
 
@@ -10,7 +10,8 @@ The paper's N-GPU layout maps 1:1 onto a JAX mesh axis:
 * per-GPU batched tiles -> an in-shard ``lax.scan`` over row blocks
   (XLA double-buffers the blocks, playing the CUDA-stream role).
 
-Two fidelity levels are provided and benchmarked separately (§Perf):
+This module holds the rank-one **deflation** engine in two fidelity
+levels, benchmarked separately (§Perf):
 
 * ``faithful=True``  — the paper's collective schedule: Alg 4 issues its
   three separate all-reduces (lines 6, 8, 16); the Alg-3 Gram is replicated
@@ -24,34 +25,20 @@ Two fidelity levels are provided and benchmarked separately (§Perf):
       all-reduce) so per-chip memory and mat-vec FLOPs drop by N, at the
       cost of one all-gather of the iterate per step.
 
-``method="block"`` swaps rank-one deflation for block subspace iteration:
-the row-sharded operator applies ``A_loc`` to the full ``(n, k)`` iterate
-and ONE ``psum`` of the ``(n, k)`` payload per step advances all k ranks
-(deflation issues one or three collectives per step *per rank*).  The
-triplet is extracted by Rayleigh–Ritz through the psum'd ``(k, k)`` Gram
-of ``W = A Q``, so no distributed QR of a tall matrix is ever needed.
+The **block** method on this backend — one fused ``(n, k)`` psum per
+step advancing all k ranks, per-shard warm-start sketches, Rayleigh–Ritz
+through the psum'd ``(k, k)`` Gram — lives in
+``core/operator.py::ShardedOperator`` and runs through the shared driver
+(``repro.core.svd``); there is no copy of it here.  ``dist_tsvd()`` is
+the deprecated back-compat shim onto the front door.
 
-``warmup_q >= 1`` (block only) builds a randomized range-finder warm
-start ``Q0 = orth((A^T A)^q A^T Omega)`` from the SAME fused ``(n, l)``
-psum the block step uses (``l = k + oversample``; each shard sketches its
-own row block of ``Omega``), so well-separated spectra converge in 1-2
-subspace sweeps instead of ~10-15.  All methods report
-``passes_over_A`` with the same accounting as ``repro.core.tsvd``
-(see ``_PASS_ACCOUNTING`` there): the faithful chain costs 3 A-sweeps
-per power step, the fused chain 2, the block step 2 per sweep — counts
-are independent of the sweep dtype.
-
-``sweep_dtype="bfloat16"`` (block only) applies the mixed-precision
-policy (``core/precision.py``): each shard is cast once to bf16 and
-both fused sweeps read the 2-byte copy with fp32 MXU accumulation,
-halving the per-chip HBM bytes of the dominant term; psum payloads,
-QR, and the Rayleigh–Ritz eigh stay fp32 (collective bytes unchanged —
-see ``launch/svd_dryrun.py`` variant ``block/bf16``).
+Pass accounting matches ``core/tsvd.py``: the faithful chain costs 3
+A-sweeps per power step, the fused chain 2, plus one u-recovery sweep
+per rank; the Gram path 3 per rank.  Counts are dtype-independent.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -61,18 +48,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import all_gather_inv as _all_gather_inv
 from repro.compat import pvary as _pvary
 from repro.compat import shard_map as _shard_map
-from repro.core.precision import resolve_sweep_dtype as _resolve_sweep_dtype
-from repro.core.tsvd import block_power_iterate as _block_power_iterate
-from repro.core.tsvd import sweep_ops as _sweep_ops
-from repro.core.tsvd import warm_start_width as _warm_start_width
+from repro.core.config import SVDConfig, SVDResult
 
-
-class DistTSVDResult(NamedTuple):
-    U: jax.Array        # (m, k) row-sharded over the mesh axes
-    S: jax.Array        # (k,)   replicated
-    V: jax.Array        # (n, k) replicated
-    iters: jax.Array    # (k,)
-    passes_over_A: jax.Array  # () A-sized operand sweeps (int32)
+#: Back-compat alias — the per-backend result NamedTuples were unified.
+DistTSVDResult = SVDResult
 
 
 def _norm(x):
@@ -175,59 +154,31 @@ def _power_loop(matvec, v0, *, eps, max_iters, force_iters, axes=None):
 
 
 # ---------------------------------------------------------------------------
-# Public entry point
+# Deflation engine (called by the front door for gram/gramfree)
 # ---------------------------------------------------------------------------
 
-def dist_tsvd(
+def _dist_deflation(
     A: jax.Array,
     k: int,
     mesh: Mesh,
     *,
-    axes: tuple[str, ...] = ("data",),
-    method: str = "gramfree",       # "gram" | "gramfree" | "block"
-    faithful: bool = False,
-    n_blocks: int = 1,              # in-shard OOM batches (paper n_b)
-    eps: float = 1e-6,
-    max_iters: int = 200,
-    force_iters: bool = False,
-    seed: int = 0,
-    warmup_q: int = 0,              # block only: range-finder warm start
-    oversample: int = 8,            # block only: extra sketch columns
-    sweep_dtype: str = "float32",   # block only: "float32" | "bfloat16"
-) -> DistTSVDResult:
-    """Distributed t-SVD of ``A`` row-sharded over ``axes`` of ``mesh``.
+    axes: tuple[str, ...],
+    method: str,            # "gram" | "gramfree"
+    faithful: bool,
+    n_blocks: int,
+    eps: float,
+    max_iters: int,
+    force_iters: bool,
+    seed: int,
+):
+    """Rank-one deflation on ``A`` row-sharded over ``axes`` of ``mesh``.
 
-    Wide matrices (m < n) are handled CSVD-style by transposing in and
-    swapping U/V out.  ``m`` must be divisible by the product of the mesh
-    axis sizes (pad upstream; `repro.core.partition` does the bookkeeping).
-
-    ``sweep_dtype="bfloat16"`` (block only) casts each shard to bf16 for
-    the fused ``(n, l)``/``(n, k)`` sweeps — halving the per-chip HBM
-    read of the dominant term — while the psum payload, QR, and the
-    Rayleigh–Ritz eigh stay fp32 (``core/precision.py``).
+    Expects the tall orientation (the front door transposes wide inputs
+    and swaps the factors); ``m`` must be divisible by the product of
+    the mesh axis sizes.  Returns ``(U, S, V, iters, passes)`` with
+    ``U`` row-sharded and everything else replicated.
     """
-    if method not in ("gram", "gramfree", "block"):
-        raise ValueError(f"unknown method {method!r}; "
-                         "expected 'gram' | 'gramfree' | 'block'")
-    if method == "block" and (faithful or n_blocks != 1):
-        # no paper-faithful schedule exists for the block method, and its
-        # step is one fused matmat — in-shard batching is not implemented
-        raise ValueError("method='block' supports neither faithful=True "
-                         "nor n_blocks > 1")
-    if warmup_q and method != "block":
-        raise ValueError("warmup_q > 0 requires method='block' "
-                         "(deflation has no block iterate to warm-start)")
-    if (_resolve_sweep_dtype(sweep_dtype) != jnp.float32
-            and method != "block"):
-        raise ValueError("sweep_dtype != 'float32' requires method='block' "
-                         "(only the block sweeps have the mixed-precision "
-                         "policy; deflation stays the fp32 oracle)")
     m, n = A.shape
-    transposed = m < n
-    if transposed:
-        A = A.T
-        m, n = n, m
-
     nshards = 1
     for a in axes:
         nshards *= mesh.shape[a]
@@ -235,7 +186,6 @@ def dist_tsvd(
         raise ValueError(f"m={m} not divisible by shards={nshards}; pad first")
 
     row_spec = P(axes if len(axes) > 1 else axes[0], None)
-    repl = P(None)
 
     @functools.partial(
         _shard_map,
@@ -247,60 +197,6 @@ def dist_tsvd(
         key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr[0])
         m_loc = A_loc.shape[0]
         A32 = A_loc.astype(jnp.float32)
-
-        if method == "block":
-            # Precision policy: the shard is cast ONCE to the sweep dtype
-            # and both A-sized sweeps read the narrow copy (fp32
-            # accumulation inside the dots); everything that crosses the
-            # mesh (psum payloads) or factorizes (QR/eigh) stays fp32.
-            mm_loc, rmm_loc = _sweep_ops(A32, sweep_dtype)
-            if warmup_q > 0:
-                # Range-finder warm start from the same fused (n, l) psum
-                # as the block step: each shard sketches its own row block
-                # of Omega (fold the flat shard index into the key).
-                l = _warm_start_width(k, oversample, n)
-                idx = jnp.int32(0)
-                for a in axes:
-                    idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-                okey = jax.random.fold_in(jax.random.fold_in(key, 1), idx)
-                Om = jax.random.normal(okey, (m_loc, l), jnp.float32)
-                Y = jax.lax.psum(rmm_loc(Om), axes)    # sketch: ONE psum
-                Y = jnp.linalg.qr(Y)[0]
-                for _ in range(warmup_q):              # q refinements
-                    Y = jnp.linalg.qr(
-                        jax.lax.psum(rmm_loc(mm_loc(Y)), axes))[0]
-                Q0 = Y
-                warm_passes = 1 + 2 * warmup_q
-            else:
-                Q0 = jnp.linalg.qr(
-                    jax.random.normal(key, (n, k), jnp.float32))[0]
-                warm_passes = 0
-
-            def matmat(Q):
-                # ONE fused (n, k) psum per step advances all k ranks;
-                # deflation pays >= one collective per step per rank.
-                return jax.lax.psum(rmm_loc(mm_loc(Q)), axes)
-
-            Q, iters = _block_power_iterate(
-                matmat, Q0, eps=eps, max_iters=max_iters,
-                force_iters=force_iters, axes=axes)
-            # Rayleigh–Ritz through the psum'd (k, k) Gram of W = A Q —
-            # no distributed QR of the tall factor is needed.
-            W_loc = A32 @ Q                            # (m_loc, l) sharded
-            G = jax.lax.psum(W_loc.T @ W_loc, axes)    # (l, l) replicated
-            lam, P_g = jnp.linalg.eigh(G)              # ascending order
-            lam, P_g = lam[::-1], P_g[:, ::-1]
-            S = jnp.sqrt(jnp.clip(lam, 0.0))
-            # Zero — don't 1/eps-blow-up — directions beyond the numerical
-            # rank (lam ~ 0): their U columns are noise either way, but
-            # this keeps every entry finite when k > rank(A).
-            inv = jnp.where(S > 1e-6 * S[0], 1.0 / (S + 1e-30), 0.0)
-            U_blk = (W_loc @ P_g) * inv[None, :]
-            V_blk = Q @ P_g
-            passes = warm_passes + 1 + 2 * iters.astype(jnp.int32)
-            return (U_blk[:, :k], S[:k], V_blk[:, :k],
-                    jnp.full((k,), iters, jnp.int32),
-                    jnp.reshape(passes, (1,)))
 
         U_loc = _pvary(jnp.zeros((m_loc, k), jnp.float32), axes)
         S = jnp.zeros((k,), jnp.float32)
@@ -365,12 +261,48 @@ def dist_tsvd(
 
     A_sharded = jax.device_put(A, NamedSharding(mesh, row_spec))
     U, S, V, iters, passes = jax.jit(run)(
-        A_sharded, jnp.array([seed], jnp.uint32))
-    passes = passes[0]
-    if transposed:
-        return DistTSVDResult(U=V, S=S, V=U, iters=iters,
-                              passes_over_A=passes)
-    return DistTSVDResult(U=U, S=S, V=V, iters=iters, passes_over_A=passes)
+        A_sharded, jnp.array([seed & 0xFFFFFFFF], jnp.uint32))
+    return U, S, V, iters, passes[0]
+
+
+# ---------------------------------------------------------------------------
+# Deprecated back-compat shim
+# ---------------------------------------------------------------------------
+
+def dist_tsvd(
+    A: jax.Array,
+    k: int,
+    mesh: Mesh,
+    *,
+    axes: tuple[str, ...] = ("data",),
+    method: str = "gramfree",       # legacy default (svd() uses "block")
+    faithful: bool = False,
+    n_blocks: int = 1,
+    eps: float = 1e-6,
+    max_iters: int = 200,
+    force_iters: bool = False,
+    seed: int = 0,
+    warmup_q: int = 0,
+    oversample: int = 8,
+    sweep_dtype: str = "float32",
+) -> SVDResult:
+    """Deprecated: use ``repro.core.svd(A, k, mesh=mesh, axes=axes, ...)``.
+
+    Translates the legacy keyword spellings into an ``SVDConfig`` (this
+    entrypoint's old default was ``method="gramfree"``) and delegates to
+    the front door.
+    """
+    from repro.core.svd import svd, warn_legacy
+    warn_legacy("dist_tsvd")
+    if method == "block" and n_blocks > 1:  # legacy contract preserved
+        raise ValueError("method='block' supports neither faithful=True "
+                         "nor n_blocks > 1 (its step is one fused matmat)")
+    cfg = SVDConfig(method=method, eps=eps, max_iters=max_iters,
+                    force_iters=force_iters, warmup_q=warmup_q,
+                    oversample=oversample, sweep_dtype=sweep_dtype,
+                    n_blocks=max(n_blocks, 1), seed=seed,
+                    faithful=faithful)
+    return svd(A, k, mesh=mesh, axes=axes, config=cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -14,9 +14,11 @@ Device memory is bounded by streaming A through in blocks:
 * ``blocked_deflated_matvec`` — the Alg-4 chain evaluated block-by-block so
   neither the residual, the Gram, nor even a full dense copy of ``A`` needs
   to be resident.
-* ``oom_tsvd``           — full driver on a blocked operator, with two
-  strategies: rank-one deflation (paper Alg 1+4, ``method="gramfree"``)
-  and block subspace iteration (``method="block"``).
+* ``_oom_deflation``     — rank-one deflation driver on the blocked
+  operator (paper Alg 1+4, ``method="gramfree"``); the block subspace
+  iteration runs through the shared driver (``repro.core.svd`` over
+  ``core/operator.py::HostBlockedOperator``) — no copy of it lives
+  here.  ``oom_tsvd`` is the deprecated back-compat shim.
 
 Host↔device staging for true degree-1 problems is in ``HostBlockedMatrix``:
 blocks live in host (numpy) memory and are ``device_put`` one at a time —
@@ -57,15 +59,12 @@ the tests).  The count is dtype-independent: bf16 staging halves
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import SVDConfig, SVDResult
 from repro.core.precision import resolve_sweep_dtype
-from repro.core.tsvd import rayleigh_ritz_from_W
 from repro.core.partition import BatchPlan, make_batch_plan, symmetric_tasks
 
 
@@ -259,6 +258,21 @@ class HostBlockedMatrix:
             outs.append(mm(cur, Q))
         return jnp.concatenate(outs)
 
+    def rmatmat(self, Y: jax.Array) -> jax.Array:
+        """``A.T @ Y`` streamed; Y: (m, k) -> (n, k).  One pass over A,
+        double-buffered like the other streamed ops.  ``Y`` stays fp32;
+        only ``A``'s staging is narrow."""
+        acc = jnp.zeros((self.n, Y.shape[1]), jnp.float32)
+        step = jax.jit(lambda acc, blk, yb: acc + _f32dot(blk.T, yb))
+        nxt = self.block(0)
+        for b in range(self.n_blocks):
+            lo, hi = self.plan.bounds(b)
+            cur = nxt
+            if b + 1 < self.n_blocks:  # prefetch next block (async H2D)
+                nxt = self.block(b + 1)
+            acc = step(acc, cur, Y[lo:hi])
+        return acc
+
     def gram_chain(self, Q: jax.Array) -> jax.Array:
         """``A^T (A Q)`` in ONE streamed pass: each host block is H2D-copied
         once and multiplied against all k columns — the block method's
@@ -316,165 +330,32 @@ class CountingHostMatrix(HostBlockedMatrix):
 
 
 # ---------------------------------------------------------------------------
-# Full OOM t-SVD driver (blocked operator, single device)
+# OOM deflation engine (blocked operator, single device)
 # ---------------------------------------------------------------------------
 
-class OOMResult(NamedTuple):
-    U: jax.Array
-    S: jax.Array
-    V: jax.Array
-    iters: jax.Array          # (k,) iterations per rank (shared for block)
-    passes_over_A: int        # full H2D streams of the host blocks
+#: Back-compat alias — the per-backend result NamedTuples were unified.
+OOMResult = SVDResult
 
 
 # How often the DEFLATION inner loop fetches the device-side convergence
 # flag.  ``bool(done)`` forces a host sync, stalling the async-dispatch
 # H2D prefetch pipeline; checking every few steps keeps dispatch running
 # ahead at the cost of at most CHECK_EVERY - 1 extra (cheap, vector-
-# sized) iterations.  The BLOCK loop instead uses a lag-one check (see
-# ``_oom_block_tsvd``): its iterations are full passes over A, so even
-# one skipped check is expensive there.
+# sized) iterations.  The BLOCK driver (``core/svd.py``) instead uses a
+# lag-one check: its iterations are full passes over A, so even one
+# skipped check is expensive there.
 CONVERGENCE_CHECK_EVERY = 4
 
 
-def _oom_block_tsvd(op: HostBlockedMatrix, k: int, *, eps, max_iters,
-                    seed, warmup_q, oversample) -> OOMResult:
-    """Block subspace iteration on a streamed host-resident operator.
+def _oom_deflation(op: HostBlockedMatrix, k: int, *, eps, max_iters,
+                   force_iters, seed):
+    """Alg-4 rank-one deflation on the streamed host-resident operator.
 
-    Each iteration makes exactly ONE pass over the host blocks (the fused
-    ``A_b^T (A_b Q)`` chain); extraction adds one more pass for
-    ``W = A Q`` plus small on-device QR/SVD factorizations.  The warm
-    start adds one streamed sketch pass + one fused pass per refinement.
-    The sweep precision follows the operator's ``stage_dtype`` (bf16
-    staging halves every H2D copy; QR/Rayleigh–Ritz stay fp32).
-
-    The subspace-convergence scalar is computed on device every step but
-    synced on host with a ONE-ITERATION LAG: by the time ``float(...)``
-    runs, the next iteration's H2D stream is already dispatched, so the
-    sync can never stall the prefetch pipeline (the device finishes the
-    tiny gap reduction long before the in-flight pass), and the
-    overshoot is bounded at one pass over A — unlike the deflation
-    loop's every-``CONVERGENCE_CHECK_EVERY`` batching, which is the
-    right trade only when iterations are cheap.
+    One fused sweep over the host blocks per power step (2 streams per
+    step counting the u-recovery structure — see the pass accounting).
+    Expects the tall orientation.  Returns ``(U, S, V, iters, passes)``.
     """
-    n = op.n
-    key = jax.random.PRNGKey(seed)
-    qr = jax.jit(jnp.linalg.qr)
-    sd = op.stage_dtype
-    if warmup_q > 0:
-        from repro.core.tsvd import warm_start_width
-        l = warm_start_width(k, oversample, n)
-        okey = jax.random.fold_in(key, 1)
-        acc = jnp.zeros((n, l), jnp.float32)
-        step = jax.jit(lambda acc, blk, om: acc + _f32dot(blk.T, om))
-        nxt = op.block(0)
-        for b in range(op.n_blocks):       # sketch A^T Omega: one pass,
-            cur = nxt                      # Omega blocks never resident
-            if b + 1 < op.n_blocks:        # prefetch next block (async H2D)
-                nxt = op.block(b + 1)
-            om_b = jax.random.normal(jax.random.fold_in(okey, b),
-                                     (cur.shape[0], l), jnp.float32)
-            acc = step(acc, cur, om_b.astype(sd))
-        Q = qr(acc)[0]
-        for _ in range(warmup_q):          # q fused refinement passes
-            Q = qr(op.gram_chain(Q))[0]
-        passes = 1 + warmup_q
-    else:
-        Q = jnp.linalg.qr(jax.random.normal(key, (n, k), jnp.float32))[0]
-        passes = 0
-    l_eff = Q.shape[1]
-    # rotation-invariant subspace gap (see tsvd.block_power_iterate),
-    # computed on device every step, synced one iteration late
-    gap = jax.jit(lambda Q, Qn: l_eff - jnp.sum((Q.T @ Qn) ** 2))
-    prev_gap = None
-    it = 0
-    for it in range(1, max_iters + 1):
-        Qn, _ = qr(op.gram_chain(Q))       # one pass over A (async dispatch)
-        passes += 1
-        gap_dev = gap(Q, Qn)               # no sync: stays on device
-        Q = Qn
-        # Lag-one sync: prev_gap's reduction finished before this
-        # iteration's in-flight stream, so float() returns immediately
-        # and dispatch stays ahead; costs at most one overshoot pass.
-        if prev_gap is not None and float(prev_gap) <= eps * l_eff:
-            break
-        prev_gap = gap_dev
-    W = op.matmat(Q)                       # one more pass over A
-    passes += 1
-    U, S, V = rayleigh_ritz_from_W(W, Q)
-    return OOMResult(U=U[:, :k], S=S[:k], V=V[:, :k],
-                     iters=jnp.full((k,), it, jnp.int32),
-                     passes_over_A=passes)
-
-
-def oom_tsvd(
-    A_host: np.ndarray,
-    k: int,
-    *,
-    n_blocks: int = 4,
-    eps: float = 1e-6,
-    max_iters: int = 200,
-    seed: int = 0,
-    method: str = "gramfree",   # "gramfree" | "block"
-    op: HostBlockedMatrix | None = None,
-    warmup_q: int = 0,          # block only: range-finder warm start
-    oversample: int = 8,        # block only: extra sketch columns
-    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
-) -> OOMResult:
-    """Degree-1 OOM truncated SVD: ``A`` stays on host, blocks streamed.
-
-    ``method="gramfree"`` runs Alg-4 rank-one deflation; ``method="block"``
-    runs block subspace iteration, streaming each host block once per
-    iteration against all k vectors (see module docstring for the
-    pass/memory trade-off and for ``warmup_q``/``oversample``).  Both keep
-    device memory at ``O(block + m*k + n*k)`` regardless of ``m*n``.
-    Assumes the RSVD (tall) orientation; wide inputs are transposed in and
-    the factors swapped out.  ``op`` injects a pre-built (possibly
-    instrumented) ``HostBlockedMatrix`` — it must already be in the tall
-    orientation and overrides ``A_host``/``n_blocks``; its ``stage_dtype``
-    must agree with ``sweep_dtype``.
-
-    ``sweep_dtype="bfloat16"`` (block only) stages the host blocks at 2
-    bytes/element, so every H2D batch copy — the paper's dominant
-    degree-1 latency — moves half the bytes; device accumulation, QR,
-    and Rayleigh–Ritz stay fp32 (``core/precision.py``).
-    """
-    if method not in ("gramfree", "block"):
-        raise ValueError(f"unknown method {method!r}; "
-                         "expected 'gramfree' | 'block'")
-    if warmup_q and method != "block":
-        raise ValueError("warmup_q > 0 requires method='block' "
-                         "(deflation has no block iterate to warm-start)")
-    sd = resolve_sweep_dtype(sweep_dtype)
-    if sd != jnp.float32 and method != "block":
-        raise ValueError("sweep_dtype != 'float32' requires method='block' "
-                         "(only the block sweeps have the mixed-precision "
-                         "policy; deflation stays the fp32 oracle)")
-    if op is not None:
-        if op.stage_dtype != sd:
-            raise ValueError(
-                f"injected op staged as {op.stage_dtype.name} but "
-                f"sweep_dtype={sd.name!r}; build the operator with "
-                f"stage_dtype={sd.name!r}")
-        transposed = False
-        m, n = op.m, op.n
-    else:
-        m, n = A_host.shape
-        transposed = m < n
-        if transposed:
-            A_host = A_host.T
-            m, n = n, m
-        op = HostBlockedMatrix(A_host, n_blocks, stage_dtype=sd)
-
-    if method == "block":
-        res = _oom_block_tsvd(op, k, eps=eps, max_iters=max_iters,
-                              seed=seed, warmup_q=warmup_q,
-                              oversample=oversample)
-        if transposed:
-            return OOMResult(U=res.V, S=res.S, V=res.U, iters=res.iters,
-                             passes_over_A=res.passes_over_A)
-        return res
-
+    m, n = op.m, op.n
     key = jax.random.PRNGKey(seed)
 
     bounds = [op.plan.bounds(b) for b in range(op.n_blocks)]
@@ -511,6 +392,8 @@ def oom_tsvd(
             v = v1
             # Fetch `done` on-host only every few steps: each bool() is a
             # device sync that would stall the H2D prefetch pipeline.
+            if force_iters:
+                continue
             if it % CONVERGENCE_CHECK_EVERY == 0 or it == max_iters:
                 if bool(done):
                     break
@@ -528,7 +411,38 @@ def oom_tsvd(
         S = S.at[l].set(sigma)
         V = V.at[:, l].set(v)
 
-    iters = jnp.asarray(iters_out)
-    if transposed:
-        return OOMResult(U=V, S=S, V=U, iters=iters, passes_over_A=passes)
-    return OOMResult(U=U, S=S, V=V, iters=iters, passes_over_A=passes)
+    return U, S, V, iters_out, passes
+
+
+# ---------------------------------------------------------------------------
+# Deprecated back-compat shim
+# ---------------------------------------------------------------------------
+
+def oom_tsvd(
+    A_host: np.ndarray,
+    k: int,
+    *,
+    n_blocks: int = 4,
+    eps: float = 1e-6,
+    max_iters: int = 200,
+    seed: int = 0,
+    method: str = "gramfree",   # legacy default (svd() uses "block")
+    op: HostBlockedMatrix | None = None,
+    warmup_q: int = 0,
+    oversample: int = 8,
+    sweep_dtype: str = "float32",
+) -> SVDResult:
+    """Deprecated: use ``repro.core.svd(A_host, k, ...)`` — a numpy array
+    (or a pre-built ``HostBlockedMatrix``) dispatches to the out-of-core
+    backend.
+
+    Translates the legacy keyword spellings into an ``SVDConfig`` (this
+    entrypoint's old default was ``method="gramfree"``) and delegates to
+    the front door; an injected ``op`` is passed through as the input.
+    """
+    from repro.core.svd import svd, warn_legacy
+    warn_legacy("oom_tsvd")
+    cfg = SVDConfig(method=method, eps=eps, max_iters=max_iters,
+                    warmup_q=warmup_q, oversample=oversample,
+                    sweep_dtype=sweep_dtype, n_blocks=n_blocks, seed=seed)
+    return svd(op if op is not None else np.asarray(A_host), k, config=cfg)

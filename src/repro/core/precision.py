@@ -32,7 +32,8 @@ reconstruction error (bf16 has an 8-bit mantissa: inputs round at
 (~1e-4) — the subspace-convergence test cannot resolve angles below the
 bf16 noise floor, so a tighter ``eps`` just burns ``max_iters``.
 
-Pass accounting (``_PASS_ACCOUNTING`` in ``core/tsvd.py``) is
+Pass accounting (``LinearOperator.passes`` in ``core/operator.py``; the
+per-method formulas are documented in ``core/tsvd.py``) is
 dtype-independent: a pass is one A-sized operand sweep no matter how
 wide the elements are — bf16 changes the *bytes per pass* (2 instead of
 4 per element), never the number of passes.

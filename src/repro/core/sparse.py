@@ -18,10 +18,10 @@ dense benchmarks when a block is small enough to densify for testing.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import numpy as np
 
+from repro.core.config import SVDConfig, SVDResult
 from repro.core.precision import resolve_sweep_dtype
 
 
@@ -255,111 +255,20 @@ class DenseStreamOperator:
         return self._A(dtype).T @ _round_to(om, dtype)
 
 
-class SparseTSVDResult(NamedTuple):
-    """Sparse t-SVD result with the uniform pass accounting."""
-
-    U: np.ndarray
-    S: np.ndarray
-    V: np.ndarray
-    iters: np.ndarray         # (k,) iterations per rank (shared for block)
-    passes_over_A: int        # full streams of the nonzeros
+#: Back-compat alias — the per-backend result NamedTuples were unified.
+SparseTSVDResult = SVDResult
 
 
-def _sparse_block_tsvd(A, k, *, eps, max_iters, seed, block_rows,
-                       warmup_q, oversample, sweep_dtype):
-    """Block subspace iteration on the streamed sparse operator.
+def _sparse_deflation(A, k, *, eps, max_iters, force_iters, seed,
+                      block_rows):
+    """Alg-4 rank-one deflation on the streamed sparse operator.
 
-    Each iteration streams the nonzeros ONCE (the fused ``gram_chain``)
-    and advances all k ranks; deflation streams twice per step *per
-    rank*.  Extraction is Rayleigh–Ritz on the skinny ``W = A Q``.  The
-    warm start costs one sketch stream + one fused stream per refinement.
-    The streamed sweeps honor ``sweep_dtype`` (bf16-rounded operands,
-    fp32 accumulation); QR, the ``W`` extraction pass, and Rayleigh–Ritz
-    stay fp32.
+    Two streams of the nonzeros per power step plus one per rank for the
+    u recovery.  The block subspace iteration on this backend runs
+    through the shared driver (``repro.core.svd`` over
+    ``core/operator.py::SparseStreamOperator``) — no copy of it lives
+    here.  Returns ``(U, S, V, iters, passes)``.
     """
-    from repro.core.tsvd import rayleigh_ritz_from_W, warm_start_width
-
-    if warmup_q > 0:
-        l = warm_start_width(k, oversample, A.n)
-        Y = A.range_sketch(l, seed=seed, block_rows=block_rows,
-                           dtype=sweep_dtype)    # 1 pass
-        Q, _ = np.linalg.qr(Y)
-        for _ in range(warmup_q):                 # q fused refinements
-            Q, _ = np.linalg.qr(A.gram_chain(Q, block_rows,
-                                             dtype=sweep_dtype))
-        Q = Q.astype(np.float32)
-        passes = 1 + warmup_q
-    else:
-        rng = np.random.default_rng(seed)
-        Q, _ = np.linalg.qr(
-            rng.standard_normal((A.n, k)).astype(np.float32))
-        passes = 0
-    l_eff = Q.shape[1]
-    it = 0
-    for it in range(1, max_iters + 1):
-        Qn, _ = np.linalg.qr(A.gram_chain(Q, block_rows, dtype=sweep_dtype))
-        passes += 1
-        # rotation-invariant subspace test (see tsvd.block_power_iterate)
-        ssc = float(np.sum((Q.T @ Qn) ** 2))
-        Q = Qn.astype(np.float32)
-        if (l_eff - ssc) <= eps * l_eff:
-            break
-    W = A.matmat(Q, block_rows)                   # fp32 extraction pass
-    passes += 1
-    U, S, V = rayleigh_ritz_from_W(W, Q)
-    return SparseTSVDResult(
-        U=np.asarray(U)[:, :k], S=np.asarray(S)[:k],
-        V=np.asarray(V)[:, :k],
-        iters=np.full((k,), it, np.int32), passes_over_A=passes)
-
-
-def sparse_tsvd(
-    A: SyntheticSparseMatrix,
-    k: int,
-    *,
-    eps: float = 1e-6,
-    max_iters: int = 100,
-    seed: int = 0,
-    block_rows: int = 1 << 16,
-    method: str = "gramfree",   # "gramfree" | "block"
-    warmup_q: int = 0,          # block only: range-finder warm start
-    oversample: int = 8,        # block only: extra sketch columns
-    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
-) -> SparseTSVDResult:
-    """Gram-free t-SVD on the streamed sparse operator (Alg 1+4 semantics).
-
-    Host-side oracle used by the sparse-scaling benchmark; the distributed
-    TPU path shards row blocks over the mesh and runs the identical chain
-    via ``dist_svd`` on densified blocks (tests cross-check the two).
-    Memory: O(m*k + n*k + nnz_block) — the dense residual never exists.
-    ``method="block"`` swaps deflation for block subspace iteration on the
-    same streamed operator (multi-vector chain; see ``_sparse_block_tsvd``),
-    optionally warm-started via ``warmup_q``/``oversample``.  The result
-    reports ``iters`` and ``passes_over_A`` (full streams of the
-    nonzeros): block costs ``[1 + q if warm] + iters + 1``, deflation
-    ``sum_l (2 iters_l + 1)`` — counts are dtype-independent.
-
-    ``sweep_dtype="bfloat16"`` (block only) rounds the streamed sweep
-    operands to bf16 with fp32 accumulation — the host-side emulation of
-    the device policy (``core/precision.py``); on a real accelerator the
-    generated row blocks would stage/ship at half the bytes.
-    """
-    if method not in ("gramfree", "block"):
-        raise ValueError(f"unknown method {method!r}; "
-                         "expected 'gramfree' | 'block'")
-    if warmup_q and method != "block":
-        raise ValueError("warmup_q > 0 requires method='block' "
-                         "(deflation has no block iterate to warm-start)")
-    if (np.dtype(resolve_sweep_dtype(sweep_dtype)) != np.float32
-            and method != "block"):
-        raise ValueError("sweep_dtype != 'float32' requires method='block' "
-                         "(only the block sweeps have the mixed-precision "
-                         "policy; deflation stays the fp32 oracle)")
-    if method == "block":
-        return _sparse_block_tsvd(A, k, eps=eps, max_iters=max_iters,
-                                  seed=seed, block_rows=block_rows,
-                                  warmup_q=warmup_q, oversample=oversample,
-                                  sweep_dtype=sweep_dtype)
     rng = np.random.default_rng(seed)
     m, n = A.m, A.n
     U = np.zeros((m, k), np.float32)
@@ -382,7 +291,7 @@ def sparse_tsvd(
             v1 = v1 / (nrm + 1e-30)
             done = abs(float(np.dot(v, v1))) >= 1 - eps
             v = v1
-            if done:
+            if done and not force_iters:
                 break
         iters_out[l] = it
         passes += 2 * it + 1     # 2 streams per power step + u recovery
@@ -392,5 +301,34 @@ def sparse_tsvd(
         U[:, l] = u / (sigma + 1e-30)
         S[l] = sigma
         V[:, l] = v
-    return SparseTSVDResult(U=U, S=S, V=V, iters=iters_out,
-                            passes_over_A=passes)
+    return U, S, V, iters_out, passes
+
+
+def sparse_tsvd(
+    A: SyntheticSparseMatrix,
+    k: int,
+    *,
+    eps: float = 1e-6,
+    max_iters: int = 100,
+    seed: int = 0,
+    block_rows: int = 1 << 16,
+    method: str = "gramfree",   # legacy default (svd() uses "block")
+    warmup_q: int = 0,
+    oversample: int = 8,
+    sweep_dtype: str = "float32",
+) -> SVDResult:
+    """Deprecated: use ``repro.core.svd(A, k, ...)`` — a streamed sparse
+    operator (``SyntheticSparseMatrix``, ``DenseStreamOperator``, or any
+    object with their surface) dispatches to the sparse-streamed backend.
+
+    Translates the legacy keyword spellings into an ``SVDConfig`` (this
+    entrypoint's old defaults were ``method="gramfree"`` and
+    ``max_iters=100``) and delegates to the front door.
+    """
+    from repro.core.svd import svd, warn_legacy
+    warn_legacy("sparse_tsvd")
+    cfg = SVDConfig(method=method, eps=eps, max_iters=max_iters,
+                    warmup_q=warmup_q, oversample=oversample,
+                    sweep_dtype=sweep_dtype, block_rows=block_rows,
+                    seed=seed)
+    return svd(A, k, config=cfg)

@@ -1,0 +1,325 @@
+"""The single SVD front door: one solver, four execution regimes.
+
+``svd(A, k, ...)`` dispatches on the input type — an in-memory jax
+array, an array plus a mesh (row-sharded), a host numpy array or
+``HostBlockedMatrix`` (out-of-core H2D streaming), a procedural sparse
+matrix (or any duck-typed streamed operator), or a custom
+``LinearOperator`` — and runs ONE shared warm-start + block-iteration
+driver against the ``core/operator.py`` protocol.  The rank-one
+deflation methods (``method="gram"``/``"gramfree"``, the paper's
+Alg 1/2/4) remain available as per-backend engines behind the same
+front door and the same ``SVDConfig``/``SVDResult`` types.
+
+The block driver (``_run_block``) is the only copy of the solver logic:
+
+* cold start ``Q0 = orth(random)`` or randomized range-finder warm start
+  ``Q0 = orth((A^T A)^q A^T Omega)`` with ``k + oversample`` sketch
+  columns (Halko-style; one ``range_sketch`` pass + ``q`` fused
+  ``gram_chain`` refinements);
+* subspace iteration ``Q <- orth(A^T A Q)`` with the rotation-invariant
+  subspace-gap test (sum of squared sines of principal angles — settles
+  on clustered spectra where per-column tests never do), synced one
+  iteration late on backends that ask for it (``lagged_sync`` — the H2D
+  prefetch pipeline is never stalled; overshoot bounded at one pass);
+* Rayleigh–Ritz extraction via the operator (one more pass), truncating
+  the oversampled columns.
+
+Pass accounting is the operator's own counter, so the reported
+``passes_over_A`` is ground truth by construction (the instrumented-
+operator tests assert it): dense/sharded sweeps cost 2 passes per
+iteration, the streamed backends fuse both halves into 1.
+
+The four legacy entrypoints (``tsvd``/``dist_tsvd``/``oom_tsvd``/
+``sparse_tsvd``) are deprecated shims that translate their old keyword
+spellings into an ``SVDConfig`` and delegate here (each warns once per
+process); see the README migration table.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import (SVDConfig, SVDResult,  # noqa: F401
+                               key_to_seed, seed_to_key)
+from repro.core.operator import (DenseOperator, HostBlockedOperator,
+                                 LinearOperator, ShardedOperator,
+                                 SparseStreamOperator, warm_start_width)
+from repro.core.precision import resolve_sweep_dtype
+
+__all__ = ["svd", "SVDConfig", "SVDResult", "key_to_seed"]
+
+
+# ---------------------------------------------------------------------------
+# Deprecation bookkeeping for the legacy entrypoint shims
+# ---------------------------------------------------------------------------
+
+_LEGACY_WARNED: set[str] = set()
+
+
+def warn_legacy(name: str) -> None:
+    """Emit the one-per-process DeprecationWarning for a legacy shim."""
+    if name in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.{name}() is deprecated; call repro.core.svd(A, k, "
+        f"config=SVDConfig(...)) instead (the old keywords map 1:1 onto "
+        f"SVDConfig fields — see the README migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _reset_legacy_warnings() -> None:
+    """Test hook: make every shim warn again."""
+    _LEGACY_WARNED.clear()
+
+
+# ---------------------------------------------------------------------------
+# The shared block-iteration driver (the only copy of the solver)
+# ---------------------------------------------------------------------------
+
+def _run_block(op: LinearOperator, k: int, cfg: SVDConfig):
+    """Warm start + subspace iteration + Rayleigh–Ritz on any operator.
+
+    Returns ``(U, S, V, iters, passes, converged)``; factors live in the
+    operator's array namespace, truncated to ``k`` columns.
+    """
+    N = op.shape[1]
+    op.reset_passes()
+    if cfg.warmup_q > 0:
+        l = warm_start_width(k, cfg.oversample, N)
+        Q = op.orth(op.range_sketch(l, cfg.seed))      # sketch pass(es)
+        for _ in range(cfg.warmup_q):                  # q refinements
+            Q = op.orth(op.gram_chain(Q))
+    else:
+        Q = op.orth(op.random_block(k, cfg.seed))      # cold start: free
+    l_eff = int(Q.shape[1])
+    tol = cfg.eps * l_eff
+
+    it, converged, prev_gap, gap = 0, False, None, None
+    for it in range(1, cfg.max_iters + 1):
+        Qn = op.orth(op.gram_chain(Q))
+        gap = op.subspace_gap(Q, Qn)   # device scalar on jax backends
+        Q = Qn
+        if cfg.force_iters:            # paper's benchmark mode: no test
+            continue
+        if op.lagged_sync:
+            # Sync the PREVIOUS gap: by the time float() runs, this
+            # iteration's stream is already dispatched, so the host wait
+            # can never stall the prefetch pipeline; overshoot is
+            # bounded at one pass over A.
+            if prev_gap is not None and float(prev_gap) <= tol:
+                converged = True
+                break
+            prev_gap = gap
+        elif float(gap) <= tol:
+            converged = True
+            break
+    if not converged and not cfg.force_iters and gap is not None:
+        converged = bool(float(gap) <= tol)            # final (lagged) gap
+
+    U, S, V = op.extract(Q)                            # one more pass
+    U, S, V = U[:, :k], S[:k], V[:, :k]                # drop oversampled
+    iters = np.full((k,), it, np.int32)
+    return U, S, V, iters, int(op.passes), converged
+
+
+def _deflation_converged(iters, cfg: SVDConfig) -> bool:
+    """Conservative: True iff every rank stopped strictly before
+    ``max_iters`` (the jitted deflation loops don't report their final
+    `done` flag, so a rank meeting the criterion exactly on the last
+    allowed iteration is indistinguishable from one that ran out)."""
+    if cfg.force_iters:
+        return False
+    return bool(np.all(np.asarray(iters) < cfg.max_iters))
+
+
+# ---------------------------------------------------------------------------
+# Per-backend assembly
+# ---------------------------------------------------------------------------
+
+def _dense_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+    A = jnp.asarray(A, jnp.float32)
+    m, n = A.shape
+    bpp = m * n * jnp.dtype(cfg.sweep_dtype).itemsize
+    if cfg.method == "block":
+        tall = m >= n
+        X = A if tall else A.T
+        op = DenseOperator(X, sweep_dtype=cfg.sweep_dtype)
+        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        if not tall:
+            U, V = V, U
+        return SVDResult(U, S, V, iters, passes, bpp, conv, "dense")
+    from repro.core.tsvd import _dense_deflation
+    key = seed_to_key(cfg.seed)
+    U, S, V, iters, passes = _dense_deflation(
+        A, k, key, eps=cfg.eps, max_iters=cfg.max_iters,
+        force_iters=cfg.force_iters, method=cfg.method)
+    return SVDResult(U, S, V, np.asarray(iters), int(passes), bpp,
+                     _deflation_converged(iters, cfg), "dense")
+
+
+def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig) -> SVDResult:
+    A = jnp.asarray(A)
+    m, n = A.shape
+    transposed = m < n                      # CSVD orientation: swap out
+    if transposed:
+        A = A.T
+        m, n = n, m
+    bpp = m * n * jnp.dtype(cfg.sweep_dtype).itemsize
+    if cfg.method == "block":
+        if cfg.faithful:
+            raise ValueError("method='block' has no paper-faithful "
+                             "collective schedule (faithful=True applies "
+                             "to the deflation methods)")
+        # n_blocks is the OOM-staging / in-shard deflation-batching knob;
+        # the block step is one fused matmat, so it has no batching here.
+        op = ShardedOperator(A, mesh, axes, sweep_dtype=cfg.sweep_dtype)
+        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+    else:
+        from repro.core.dist_svd import _dist_deflation
+        U, S, V, iters, passes = _dist_deflation(
+            A, k, mesh, axes=axes, method=cfg.method,
+            faithful=cfg.faithful, n_blocks=cfg.n_blocks, eps=cfg.eps,
+            max_iters=cfg.max_iters, force_iters=cfg.force_iters,
+            seed=cfg.seed)
+        iters = np.asarray(iters)
+        passes = int(passes)
+        conv = _deflation_converged(iters, cfg)
+    if transposed:
+        U, V = V, U
+    return SVDResult(U, S, V, iters, passes, bpp, conv, "sharded")
+
+
+def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+    from repro.core.oom import HostBlockedMatrix, _oom_deflation
+    sd = resolve_sweep_dtype(cfg.sweep_dtype)
+    if isinstance(A, HostBlockedMatrix):
+        if A.stage_dtype != sd:
+            raise ValueError(
+                f"injected operator staged as {A.stage_dtype.name} but "
+                f"sweep_dtype={sd.name!r}; build the operator with "
+                f"stage_dtype={sd.name!r}")
+        host, transposed = A, False        # injected ops are already tall
+    else:
+        A_host = np.asarray(A)
+        m, n = A_host.shape
+        transposed = m < n
+        if transposed:
+            A_host = A_host.T
+        host = HostBlockedMatrix(A_host, cfg.n_blocks, stage_dtype=sd)
+    if cfg.method == "block":
+        op = HostBlockedOperator(host)
+        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+    elif cfg.method == "gramfree":
+        U, S, V, iters, passes = _oom_deflation(
+            host, k, eps=cfg.eps, max_iters=cfg.max_iters,
+            force_iters=cfg.force_iters, seed=cfg.seed)
+        conv = _deflation_converged(iters, cfg)
+    else:
+        raise ValueError("method='gram' is not available on the "
+                         "out-of-core backend (the dense residual would "
+                         "defeat the streaming); expected 'gramfree' | "
+                         "'block'")
+    if transposed:
+        U, V = V, U
+    return SVDResult(U, S, V, np.asarray(iters), passes,
+                     host.bytes_per_pass, conv, "hostblocked")
+
+
+def _sparsestream_svd(sp, k: int, cfg: SVDConfig) -> SVDResult:
+    from repro.core.sparse import _sparse_deflation
+    if cfg.method == "block":
+        op = SparseStreamOperator(sp, block_rows=cfg.block_rows,
+                                  sweep_dtype=cfg.sweep_dtype)
+        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        bpp = op.bytes_per_pass
+    elif cfg.method == "gramfree":
+        U, S, V, iters, passes = _sparse_deflation(
+            sp, k, eps=cfg.eps, max_iters=cfg.max_iters,
+            force_iters=cfg.force_iters, seed=cfg.seed,
+            block_rows=cfg.block_rows)
+        conv = _deflation_converged(iters, cfg)
+        # deflation is always fp32; one source of truth for the pass size
+        bpp = SparseStreamOperator(sp).bytes_per_pass
+    else:
+        raise ValueError("method='gram' is not available on the "
+                         "sparse-streamed backend (the Gram matrix would "
+                         "densify); expected 'gramfree' | 'block'")
+    return SVDResult(U, S, V, np.asarray(iters), passes, bpp, conv,
+                     "sparsestream")
+
+
+def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
+    if cfg.method != "block":
+        raise ValueError("custom LinearOperator inputs run the shared "
+                         "block driver; method must be 'block'")
+    op_sd = getattr(op, "sweep_dtype", cfg.sweep_dtype)
+    if resolve_sweep_dtype(op_sd) != resolve_sweep_dtype(cfg.sweep_dtype):
+        raise ValueError(
+            f"operator was built with sweep_dtype={op_sd!r} but the "
+            f"config says {cfg.sweep_dtype!r}; rebuild one of them")
+    U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+    return SVDResult(U, S, V, iters, passes, op.bytes_per_pass, conv,
+                     getattr(op, "backend", "operator"))
+
+
+# ---------------------------------------------------------------------------
+# Front door
+# ---------------------------------------------------------------------------
+
+def svd(A, k: int, *, mesh=None, axes=("data",),
+        config: SVDConfig | None = None, **overrides) -> SVDResult:
+    """Truncated SVD of ``A`` to rank ``k`` — the one entry point.
+
+    Dispatch on the input type:
+
+    * ``jax.Array``                         -> in-memory serial solve;
+    * any array + ``mesh=``                 -> row-sharded over ``axes``
+      of the mesh (one fused psum per A-sized product; wide inputs are
+      transposed in and the factors swapped out);
+    * ``np.ndarray``                        -> out-of-core: the array
+      stays in host memory, split into ``n_blocks`` row blocks streamed
+      H2D one at a time;
+    * ``HostBlockedMatrix``                 -> out-of-core on a pre-built
+      (possibly instrumented, possibly bf16-staged) host operator;
+    * ``SyntheticSparseMatrix`` (or any object with the streamed
+      ``matmat``/``rmatmat``/``gram_chain``/``range_sketch`` surface)
+      -> sparse-streamed host solve;
+    * a ``LinearOperator`` subclass         -> the shared block driver
+      on your own backend.
+
+    Solver knobs come from ``config`` (an ``SVDConfig``) and/or keyword
+    ``overrides`` (applied on top of ``config`` and re-validated)::
+
+        res = svd(A, 32, method="block", warmup_q=1, eps=1e-6)
+        res = svd(A, 32, config=SVDConfig(sweep_dtype="bfloat16"),
+                  mesh=mesh)
+
+    Returns an ``SVDResult`` (U, S, V, iters, passes_over_A,
+    bytes_per_pass, converged, backend).
+    """
+    cfg = config if config is not None else SVDConfig()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if mesh is not None:
+        return _sharded_svd(A, k, mesh, tuple(axes), cfg)
+    if isinstance(A, LinearOperator):
+        return _operator_svd(A, k, cfg)
+    if isinstance(A, jax.Array):
+        return _dense_svd(A, k, cfg)
+    if isinstance(A, np.ndarray):
+        return _hostblocked_svd(A, k, cfg)
+    from repro.core.oom import HostBlockedMatrix
+    if isinstance(A, HostBlockedMatrix):
+        return _hostblocked_svd(A, k, cfg)
+    if all(hasattr(A, attr) for attr in
+           ("matmat", "rmatmat", "gram_chain", "range_sketch")):
+        return _sparsestream_svd(A, k, cfg)
+    raise TypeError(
+        f"svd() cannot dispatch on input of type {type(A).__name__}: "
+        "expected a jax array (serial), an array plus mesh= (sharded), "
+        "a numpy array or HostBlockedMatrix (out-of-core), a streamed "
+        "sparse operator, or a LinearOperator")

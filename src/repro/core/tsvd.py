@@ -1,103 +1,45 @@
-"""Serial truncated SVD via the power method (paper Algorithms 1 & 2).
+"""Serial deflation t-SVD engine (paper Algorithms 1 & 2) + shared math.
 
-This is the faithful single-device reference implementation of the paper's
-t-SVD: rank-one deflation (Alg 1) around a Gram-matrix power iteration
-(Alg 2).  Everything downstream (distributed, out-of-core, kernels) is
-validated against this module, and this module is validated against
-``numpy.linalg.svd`` in the tests.
+This module holds the faithful single-device deflation engine —
+rank-one deflation (Alg 1) around a Gram-matrix power iteration (Alg 2),
+dense (``"gram"``) or as the Eq. 2/3 mat-vec chain (``"gramfree"``,
+Alg 4 semantics) — plus the numerical helpers every backend shares
+(``sweep_ops``, ``rayleigh_ritz``, ``warm_start_width``).
 
-Three factorization strategies are provided:
+The public entry point is ``repro.core.svd()`` (``core/svd.py``): it
+dispatches all four execution regimes, runs the block subspace-iteration
+method through the shared driver over the ``core/operator.py`` protocol,
+and calls ``_dense_deflation`` below for the serial deflation methods.
+``tsvd()`` here is a deprecated back-compat shim onto it.
 
-* ``gram``      — materialize the deflated residual ``X = A - U S V^T`` and
-                  its Gram matrix ``B`` (paper's dense path, Alg 1 line 8 +
-                  Alg 2 lines 6-9).
-* ``gramfree``  — never materialize residual or Gram; evaluate
-                  ``v1 = B v0`` as the right-to-left mat-vec chain of
-                  Eq. (2)/(3) (paper's sparse path, Alg 4 semantics).
-* ``block``     — beyond-paper block (subspace) power iteration in the
-                  style of Lu et al. (arXiv:1706.07191): iterate a whole
-                  ``(n, k)`` block ``Q <- orth(A^T A Q)`` (QR re-
-                  orthonormalization each step), then extract the triplet
-                  by Rayleigh–Ritz.  One pass over ``A`` advances ALL k
-                  ranks at once, so a rank-k factorization costs
-                  ``O(iters)`` passes instead of deflation's
-                  ``O(sum_l iters_l)`` — typically 10-100x fewer sweeps of
-                  the dominant data-movement term — at the price of
-                  ``O((m + n) k)`` extra working memory for the block.
+Pass accounting (``passes_over_A``: A-sized operand sweeps — the
+paper's dominant data-movement unit, independent of the sweep dtype):
 
-The block method additionally supports a **randomized range-finder warm
-start** (Halko et al.; cf. Demchik et al., arXiv:1907.06470): instead of
-a random orthonormal ``Q0``, pass ``warmup_q=q >= 1`` to initialize with
-
-    ``Q0 = orth((A^T A)^q  A^T Omega)``,   ``Omega ~ N(0, 1)^(m x l)``
-
-where ``l = k + oversample`` (clamped to ``min(m, n)``).  The sketch
-``A^T Omega`` costs one extra pass over ``A`` and each of the ``q``
-power refinements two more, but for spectra with a decaying tail it
-replaces ~10-15 cold subspace iterations with 1-2 — the oversampled
-``l``-wide iterate converges at rate ``(sigma_{l+1}/sigma_k)^2`` per
-sweep instead of the cold ``(sigma_{k+1}/sigma_k)^2``.  The extra
-``oversample`` columns ride through the iteration and are truncated at
-the Rayleigh–Ritz extraction.  ``warmup_q=0`` (default) keeps the cold
-random start.
-
-The block method also honors the **mixed-precision sweep policy**
-(``core/precision.py``): ``sweep_dtype="bfloat16"`` casts the A-sized
-sweep operands to bf16 with fp32 accumulation — halving the dominant
-HBM byte traffic — while QR and the Rayleigh–Ritz extraction stay fp32
-(``"float32"``, the default, is bit-stable with the pre-policy path).
-
-Every strategy reports uniform **pass accounting**: the result tuple
-carries ``iters`` (power/subspace iterations actually run) and
-``passes_over_A`` (A-sized operand sweeps — the paper's dominant
-data-movement unit, independent of the sweep dtype; see
-``_PASS_ACCOUNTING`` below for the per-method formulas).
-
-Deflation (``gram``/``gramfree``) stays the default and the numerical
-oracle; the property tests assert that all strategies agree with
-``numpy.linalg.svd`` and with each other to tolerance.
+  gram      3 per rank: residual build + Gram product + u recovery
+            (the power loop itself runs on the small (n, n) B).
+  gramfree  3 per power step (A v, A^T X v, A^T U S V^T v) + 1 per rank
+            for u recovery:  3 * sum_l iters_l + k.
+  block     (shared driver) 2 per subspace sweep + 1 for Rayleigh–Ritz,
+            plus the warm start's 1 (sketch) + 2q (refinements) on the
+            dense/sharded backends; the streamed backends fuse the two
+            sweep halves into ONE stream, so their per-sweep (and
+            per-refinement) cost is 1.  The count is the operator's own
+            counter (``LinearOperator.passes``), cross-checked against
+            an instrumented operator in the tests.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import SVDConfig, SVDResult, key_to_seed
 from repro.core.precision import resolve_sweep_dtype
 
-
-class TSVDResult(NamedTuple):
-    """Truncated SVD result: ``A ~= U @ diag(S) @ V.T``."""
-
-    U: jax.Array  # (m, k)
-    S: jax.Array  # (k,)
-    V: jax.Array  # (n, k)
-    iters: jax.Array  # (k,) power-method iterations actually used per rank
-    passes_over_A: jax.Array  # () total A-sized operand sweeps (int32)
-
-
-# _PASS_ACCOUNTING — the per-method formulas behind ``passes_over_A``.
-# A "pass" is one A-sized operand sweep (one read of A, or of the equally
-# sized residual X) — the unit the paper's H2D/collective cost scales with.
-#
-#   gram      3 per rank: residual build + Gram product + u recovery
-#             (the power loop itself runs on the small (n, n) B).
-#   gramfree  3 per power step (A v, A^T X v, A^T U S V^T v) + 1 per rank
-#             for u recovery:  3 * sum_l iters_l + k.
-#   block     2 per subspace sweep (A Q, A^T Y) + 1 for Rayleigh–Ritz,
-#             plus the warm start's 1 (sketch) + 2q (refinements):
-#             [1 + 2q if warm] + 2 * iters + 1.
-#
-# The streamed backends (``oom_tsvd``/``sparse_tsvd``) fuse the two block
-# sweeps into ONE stream of the data, so their block formula is
-# [1 + q] + iters + 1 — documented there and cross-checked against an
-# instrumented operator in the tests.
-#
-# The accounting is dtype-independent: ``sweep_dtype="bfloat16"`` halves
-# the BYTES each pass moves (2 instead of 4 per element), never the
-# number of passes — the formulas above hold for every sweep dtype.
+#: Back-compat alias — the per-backend result NamedTuples were unified
+#: into ``SVDResult`` (same leading fields, same order).
+TSVDResult = SVDResult
 
 
 def _l2norm(x: jax.Array) -> jax.Array:
@@ -222,62 +164,13 @@ def power_iterate_chain(
     return v, iters
 
 
-def block_power_iterate(
-    matmat,
-    Q0: jax.Array,
-    *,
-    eps: float = 1e-6,
-    max_iters: int = 100,
-    force_iters: bool = False,
-    axes: tuple[str, ...] | None = None,
-):
-    """Subspace iteration ``Q <- qr(B @ Q)`` with Ritz-value stopping.
-
-    ``matmat`` applies the (possibly implicit) Gram operator ``B`` to an
-    ``(n, k)`` block; ``Q0`` must have orthonormal columns.  Convergence
-    is tested on the SUBSPACE, not per column: ``k - ||Q^T Q_new||_F^2``
-    is the sum of squared sines of the principal angles between successive
-    iterates, so it is invariant to rotations within the subspace —
-    per-column tests (the scalar method's ``|v . v1|``) never settle when
-    singular values are clustered, even though the subspace (and hence the
-    Rayleigh–Ritz extraction) converged long ago.  Returns ``(Q, iters)``.
-
-    ``axes`` is only used inside ``shard_map`` (``dist_svd``): ``matmat``
-    must then return psum'd — shard-identical — blocks, and the carry is
-    marked mesh-varying for vma-typed jax versions.
-    """
-    k = Q0.shape[1]
-
-    def cond(state):
-        i, _, done = state
-        if force_iters:
-            return i < max_iters
-        return jnp.logical_and(i < max_iters, jnp.logical_not(done))
-
-    def body(state):
-        i, Q, _ = state
-        Z = matmat(Q)
-        Qn, _ = jnp.linalg.qr(Z)
-        # sum of cos^2 of principal angles between span(Q) and span(Qn)
-        ssc = jnp.sum((Q.T @ Qn) ** 2)
-        done = (k - ssc) <= eps * k
-        return i + 1, Qn, done
-
-    init = (jnp.array(0, jnp.int32), Q0, jnp.array(False))
-    if axes is not None:
-        from repro.compat import pvary
-        init = pvary(init, tuple(axes))
-    iters, Q, _ = jax.lax.while_loop(cond, body, init)
-    return Q, iters
-
-
 def rayleigh_ritz_from_W(W: jax.Array, Q: jax.Array):
     """Rayleigh–Ritz extraction from a precomputed projection ``W = X Q``.
 
     QR the skinny ``W`` and SVD only the small ``(k, k)`` triangle —
     ``O((M + N) k^2)``, no dense SVD of ``X``, and QR keeps the extra
     columns orthonormal (finite) when k exceeds the numerical rank.
-    Shared by the serial, out-of-core, and sparse block paths.
+    Shared by every backend of the block driver.
     """
     Uw, Rw = jnp.linalg.qr(W)
     Us, S, Vh = jnp.linalg.svd(Rw)             # (k, k) — tiny
@@ -319,112 +212,32 @@ def sweep_ops(X: jax.Array, sweep_dtype):
     return mm, rmm
 
 
-def range_finder_q0(X: jax.Array, k: int, key: jax.Array, *,
-                    warmup_q: int, oversample: int,
-                    sweep_dtype="float32") -> jax.Array:
-    """Randomized range-finder start ``Q0 = orth((X^T X)^q X^T Omega)``.
-
-    ``X`` is the tall ``(M, N)`` operand.  QR re-orthonormalizes between
-    refinements (numerically identical subspace to the literal power of
-    the formula, but immune to ``sigma^(2q)`` dynamic-range blow-up).
-    Costs ``1 + 2 * warmup_q`` passes over ``X``; the sketch and the
-    refinement sweeps honor the ``sweep_dtype`` policy (QR stays fp32).
-    """
-    M, N = X.shape
-    l = warm_start_width(k, oversample, N)
-    mm, rmm = sweep_ops(X, sweep_dtype)
-    Om = jax.random.normal(jax.random.fold_in(key, 1), (M, l), jnp.float32)
-    Y = jnp.linalg.qr(rmm(Om))[0]               # sketch: one pass over X
-    for _ in range(warmup_q):                   # q refinements: two passes each
-        Y = jnp.linalg.qr(rmm(mm(Y)))[0]
-    return Y
-
-
-def _block_tsvd(A, k, key, *, eps, max_iters, force_iters, warmup_q,
-                oversample, sweep_dtype):
-    """Rank-k t-SVD by block subspace iteration + Rayleigh–Ritz."""
-    m, n = A.shape
-    tall = m >= n
-    X = A if tall else A.T                      # (M, N), M >= N
-    N = X.shape[1]
-    mm, rmm = sweep_ops(X, sweep_dtype)
-    if warmup_q > 0:
-        Q0 = range_finder_q0(X, k, key, warmup_q=warmup_q,
-                             oversample=oversample, sweep_dtype=sweep_dtype)
-        warm_passes = 1 + 2 * warmup_q
-    else:
-        Q0 = jnp.linalg.qr(jax.random.normal(key, (N, k), jnp.float32))[0]
-        warm_passes = 0
-    Q, iters = block_power_iterate(
-        lambda Q: rmm(mm(Q)),                   # two passes over X per step
-        Q0, eps=eps, max_iters=max_iters, force_iters=force_iters)
-    U, S, V = rayleigh_ritz(X, Q)               # one more pass over X
-    U, S, V = U[:, :k], S[:k], V[:, :k]         # drop oversampled columns
-    if not tall:
-        U, V = V, U
-    passes = warm_passes + 1 + 2 * iters.astype(jnp.int32)
-    return TSVDResult(U, S, V, jnp.full((k,), iters, jnp.int32), passes)
-
+# ---------------------------------------------------------------------------
+# Serial deflation engine (called by the front door for gram/gramfree)
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "eps", "max_iters", "force_iters", "method",
-                     "warmup_q", "oversample", "sweep_dtype"),
+    static_argnames=("k", "eps", "max_iters", "force_iters", "method"),
 )
-def tsvd(
+def _dense_deflation(
     A: jax.Array,
     k: int,
-    key: jax.Array | None = None,
+    key: jax.Array,
     *,
-    eps: float = 1e-6,
-    max_iters: int = 200,
-    force_iters: bool = False,
-    method: str = "gram",  # "gram" | "gramfree" | "block"
-    warmup_q: int = 0,     # block only: range-finder warm start (0 = cold)
-    oversample: int = 8,   # block only: extra sketch columns p (l = k + p)
-    sweep_dtype: str = "float32",  # block only: "float32" | "bfloat16"
-) -> TSVDResult:
-    """Truncated SVD of ``A`` to rank ``k``.
+    eps: float,
+    max_iters: int,
+    force_iters: bool,
+    method: str,  # "gram" | "gramfree"
+):
+    """Rank-one deflation to rank ``k`` (paper Alg 1 around Alg 2/4).
 
-    ``method="gram"`` materializes the deflated residual + Gram each rank
-    (paper Alg 1 dense path); ``method="gramfree"`` uses the Eq. 2/3
-    mat-vec chain (paper's sparse path) — those two are identical up to
-    round-off.  ``method="block"`` replaces rank-one deflation with block
-    subspace iteration (all k ranks advance per pass over ``A``) and
-    agrees with the deflation methods to iteration tolerance; its
-    ``iters`` output holds the shared block iteration count in every slot.
-
-    ``warmup_q >= 1`` (block only) initializes the iterate with the
-    randomized range finder ``orth((A^T A)^q A^T Omega)`` using
-    ``k + oversample`` sketch columns — see the module docstring.  All
-    methods report ``passes_over_A`` per ``_PASS_ACCOUNTING`` (the count
-    is dtype-independent).
-
-    ``sweep_dtype="bfloat16"`` (block only) runs the two A-sized sweeps
-    per step — and the warm-start sketch sweeps — on bf16 operands with
-    fp32 accumulation, halving the dominant HBM byte traffic; QR and the
-    Rayleigh–Ritz extraction stay fp32 (see ``core/precision.py`` for
-    the policy and the recommended looser ``eps``).
+    Returns ``(U, S, V, iters, passes)``; orientation is handled here
+    (wide inputs power-iterate the left side, per the paper's shape
+    dispatch), so callers pass ``A`` as-is.
     """
-    if method not in ("gram", "gramfree", "block"):
-        raise ValueError(f"unknown method {method!r}; "
-                         "expected 'gram' | 'gramfree' | 'block'")
-    if warmup_q and method != "block":
-        raise ValueError("warmup_q > 0 requires method='block' "
-                         "(deflation has no block iterate to warm-start)")
-    sd = resolve_sweep_dtype(sweep_dtype)
-    if sd != jnp.float32 and method != "block":
-        raise ValueError("sweep_dtype != 'float32' requires method='block' "
-                         "(only the block sweeps have the mixed-precision "
-                         "policy; deflation stays the fp32 oracle)")
-    if key is None:
-        key = jax.random.PRNGKey(0)
     m, n = A.shape
     A = A.astype(jnp.float32)
-    if method == "block":
-        return _block_tsvd(A, k, key, eps=eps, max_iters=max_iters,
-                           force_iters=force_iters, warmup_q=warmup_q,
-                           oversample=oversample, sweep_dtype=sweep_dtype)
     tall = m >= n
 
     U = jnp.zeros((m, k), jnp.float32)
@@ -482,15 +295,50 @@ def tsvd(
         passes = jnp.asarray(3 * k, jnp.int32)  # residual + Gram + u, per rank
     else:
         passes = 3 * jnp.sum(iters_out) + k     # 3 sweeps/step + u recovery
-    return TSVDResult(U, S, V, iters_out, passes.astype(jnp.int32))
+    return U, S, V, iters_out, passes.astype(jnp.int32)
 
 
-def reconstruct(res: TSVDResult) -> jax.Array:
+# ---------------------------------------------------------------------------
+# Deprecated back-compat shim
+# ---------------------------------------------------------------------------
+
+def tsvd(
+    A: jax.Array,
+    k: int,
+    key: jax.Array | None = None,
+    *,
+    eps: float = 1e-6,
+    max_iters: int = 200,
+    force_iters: bool = False,
+    method: str = "gram",          # legacy default (svd() defaults to "block")
+    warmup_q: int = 0,
+    oversample: int = 8,
+    sweep_dtype: str = "float32",
+) -> SVDResult:
+    """Deprecated: use ``repro.core.svd(A, k, config=SVDConfig(...))``.
+
+    Translates the legacy keyword spellings — including the jax PRNG
+    ``key`` (now the integer ``SVDConfig.seed``) and this entrypoint's
+    old ``method="gram"`` default — and delegates to the front door.
+    Unlike the old implementation this shim is NOT ``jax.jit``-wrappable
+    (the driver dispatches its own jitted steps and syncs convergence on
+    host); call it — and ``svd()`` — outside of jit.
+    """
+    from repro.core.svd import svd, warn_legacy
+    warn_legacy("tsvd")
+    cfg = SVDConfig(method=method, eps=eps, max_iters=max_iters,
+                    force_iters=force_iters, warmup_q=warmup_q,
+                    oversample=oversample, sweep_dtype=sweep_dtype,
+                    seed=key_to_seed(key))
+    return svd(jnp.asarray(A), k, config=cfg)
+
+
+def reconstruct(res) -> jax.Array:
     """``U diag(S) V^T`` — rank-k reconstruction."""
     return (res.U * res.S[None, :]) @ res.V.T
 
 
-def relative_error(A: jax.Array, res: TSVDResult) -> jax.Array:
+def relative_error(A: jax.Array, res) -> jax.Array:
     """``||A - U S V^T||_F / ||A||_F``."""
     num = jnp.linalg.norm(A - reconstruct(res))
     return num / (jnp.linalg.norm(A) + 1e-30)

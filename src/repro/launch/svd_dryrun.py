@@ -39,7 +39,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.compat import shard_map as _shard_map  # noqa: E402
 from repro.core.dist_svd import (_deflated_chain_step,  # noqa: E402
                                  _all_gather_inv)
-from repro.core.tsvd import sweep_ops as _sweep_ops  # noqa: E402
+from repro.core.operator import (sharded_gram_chain_fn,  # noqa: E402
+                                 sharded_sketch_fn)
 from repro.launch.dryrun import analyze, RESULTS_DIR  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
@@ -86,21 +87,23 @@ def lower_variant(mesh, kind: str, faithful: bool):
     return jax.jit(power_step).lower(*args)
 
 
-def lower_block_variant(mesh):
-    """One BLOCK power step (method="block"): Y = A Q, Z = psum(A^T Y),
-    QR — a single fused (n, k) collective advances all K ranks."""
+def lower_block_variant(mesh, sweep_dtype="float32"):
+    """One BLOCK subspace step (method="block"): the EXACT jitted
+    ``ShardedOperator`` step the shared driver runs — the fused
+    ``psum(A_loc^T (A_loc Q))`` (ONE (n, k) collective advances all K
+    ranks) followed by the driver's QR re-orthonormalization.  Lowering
+    the driver's own function means the analyzed schedule can't drift
+    from ``repro.core.svd``.  ``sweep_dtype="bfloat16"`` lowers the
+    mixed-precision twin: both A-sized sweeps read the 2-byte shard copy
+    with fp32 MXU accumulation; the psum payload and the QR stay fp32 —
+    per-chip HBM bytes of the dominant term halve, collective bytes are
+    identical."""
     axes = ("data", "model")
     row_spec = P(axes, None)
+    chain = sharded_gram_chain_fn(mesh, axes, sweep_dtype)
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(row_spec, P(None, None)),
-        out_specs=P(None, None))
-    def block_step(A_loc, Q):
-        Y = A_loc @ Q                                  # (m_loc, K) local
-        Z = jax.lax.psum(A_loc.T @ Y, axes)            # ONE collective
-        Qn, _ = jnp.linalg.qr(Z)
-        return Qn
+    def block_step(A, Q):
+        return jnp.linalg.qr(chain(A, Q))[0]
 
     sds = lambda shape, spec: jax.ShapeDtypeStruct(
         shape, jnp.float32, sharding=NamedSharding(mesh, spec))
@@ -108,58 +111,28 @@ def lower_block_variant(mesh):
     return jax.jit(block_step).lower(*args)
 
 
-def lower_block_bf16_variant(mesh):
-    """One block power step under the mixed-precision sweep policy
-    (sweep_dtype="bfloat16"): the shard is cast once to bf16 and BOTH
-    A-sized sweeps read the 2-byte copy with fp32 MXU accumulation
-    (``preferred_element_type``); the psum payload and the QR stay fp32.
-    Halves the dominant per-chip HBM term of block/opt; the collective
-    schedule (and its bytes) is identical."""
-    axes = ("data", "model")
-    row_spec = P(axes, None)
-
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(row_spec, P(None, None)),
-        out_specs=P(None, None))
-    def block_step_bf16(A_loc, Q):
-        # the SAME policy closures dist_tsvd runs — the lowered schedule
-        # can't drift from the driver (cast once, both sweeps read bf16,
-        # fp32 accumulation)
-        mm, rmm = _sweep_ops(A_loc, "bfloat16")
-        Z = jax.lax.psum(rmm(mm(Q)), axes)             # fp32 payload
-        Qn, _ = jnp.linalg.qr(Z)
-        return Qn
-
-    sds = lambda shape, spec: jax.ShapeDtypeStruct(
-        shape, jnp.float32, sharding=NamedSharding(mesh, spec))
-    args = (sds((M_GLOBAL, N), row_spec), sds((N, K), P(None, None)))
-    return jax.jit(block_step_bf16).lower(*args)
-
-
 def lower_block_warm_variant(mesh):
-    """The range-finder warm start (method="block", warmup_q=1): sketch
-    psum ``A^T Omega`` + one fused ``(n, l)`` refinement + QR.  A one-off
-    cost of the same shape as ~2.5 block steps that buys ~10x fewer
-    iterations on separated spectra (see benchmarks/warmstart.py)."""
+    """The range-finder warm start (method="block", warmup_q=1): the
+    driver's ``ShardedOperator`` sketch step (each shard generates its
+    own Gaussian Omega row block — the (m, l) Omega is never resident —
+    and ONE psum reduces ``A^T Omega``) + QR + one fused ``(n, l)``
+    refinement + QR.  A one-off cost of the same shape as ~2.5 block
+    steps that buys ~10x fewer iterations on separated spectra (see
+    benchmarks/warmstart.py)."""
     axes = ("data", "model")
     row_spec = P(axes, None)
     L = K + 8                                          # oversampled width
+    sketch = sharded_sketch_fn(mesh, axes, L, "float32")
+    chain = sharded_gram_chain_fn(mesh, axes, "float32")
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(row_spec, row_spec),
-        out_specs=P(None, None))
-    def warm_step(A_loc, Om_loc):
-        Y = jax.lax.psum(A_loc.T @ Om_loc, axes)       # sketch: ONE psum
-        Y = jnp.linalg.qr(Y)[0]
-        Z = jax.lax.psum(A_loc.T @ (A_loc @ Y), axes)  # q=1 refinement
-        Qn, _ = jnp.linalg.qr(Z)
-        return Qn
+    def warm_step(A, seed_arr):
+        Y = jnp.linalg.qr(sketch(A, seed_arr))[0]      # sketch: ONE psum
+        return jnp.linalg.qr(chain(A, Y))[0]           # q=1 refinement
 
-    sds = lambda shape, spec: jax.ShapeDtypeStruct(
-        shape, jnp.float32, sharding=NamedSharding(mesh, spec))
-    args = (sds((M_GLOBAL, N), row_spec), sds((M_GLOBAL, L), row_spec))
+    sds = lambda shape, dtype, spec: jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec))
+    args = (sds((M_GLOBAL, N), jnp.float32, row_spec),
+            sds((1,), jnp.uint32, P(None)))
     return jax.jit(warm_step).lower(*args)
 
 
@@ -180,10 +153,13 @@ def main():
     # per-step cost by K when comparing against the per-rank variants),
     # its bf16-sweep twin (same collectives, half the per-chip HBM
     # bytes on the dominant A term), and the range-finder warm start
-    # (one-off; replaces ~10x the steps)
-    for tag, lower_fn in (("block/opt", lower_block_variant),
-                          ("block/bf16", lower_block_bf16_variant),
-                          ("block/warm", lower_block_warm_variant)):
+    # (one-off; replaces ~10x the steps) — all lowered from the SAME
+    # jitted ShardedOperator step functions the svd() driver runs
+    for tag, lower_fn in (
+            ("block/opt", lower_block_variant),
+            ("block/bf16",
+             lambda mesh: lower_block_variant(mesh, "bfloat16")),
+            ("block/warm", lower_block_warm_variant)):
         print(f"[run ] svd power step {tag}", flush=True)
         lw = lower_fn(mesh)
         out[tag] = analyze(lw)

@@ -1,0 +1,105 @@
+"""API-surface snapshot: the public names of repro.core, the SVDConfig
+field set, and the SVDResult field order are pinned here so a PR that
+moves the surface has to say so in the diff."""
+import dataclasses
+
+import pytest
+
+import repro.core as core
+from repro.core import SVDConfig, SVDResult
+
+EXPECTED_ALL = {
+    # the front door + its types
+    "svd", "SVDConfig", "SVDResult", "key_to_seed",
+    # the operator protocol + adapters
+    "LinearOperator", "DenseOperator", "ShardedOperator",
+    "HostBlockedOperator", "SparseStreamOperator",
+    # shared numerical helpers
+    "SWEEP_DTYPES", "resolve_sweep_dtype", "sweep_ops",
+    "warm_start_width", "rayleigh_ritz", "rayleigh_ritz_from_W",
+    "reconstruct", "relative_error", "svd_1d", "power_iterate_gram",
+    "power_iterate_chain",
+    # blocked/streamed data structures
+    "HostBlockedMatrix", "CountingHostMatrix", "SyntheticSparseMatrix",
+    "DenseStreamOperator", "blocked_gram", "tiled_gram",
+    "blocked_deflated_matvec", "Partition", "make_partition", "BatchPlan",
+    "make_batch_plan", "symmetric_tasks",
+    # deprecated legacy entrypoints + result-type aliases
+    "tsvd", "dist_tsvd", "oom_tsvd", "sparse_tsvd",
+    "TSVDResult", "DistTSVDResult", "OOMResult", "SparseTSVDResult",
+}
+
+# The one config: field -> default.  Adding a knob is a deliberate,
+# visible change to this snapshot (and to core/config.py — one file).
+EXPECTED_CONFIG_FIELDS = {
+    "method": "block",
+    "eps": 1e-6,
+    "max_iters": 200,
+    "force_iters": False,
+    "warmup_q": 0,
+    "oversample": 8,
+    "sweep_dtype": "float32",
+    "n_blocks": 4,
+    "block_rows": 1 << 16,
+    "seed": 0,
+    "faithful": False,
+}
+
+
+def test_core_all_snapshot():
+    assert set(core.__all__) == EXPECTED_ALL
+    assert len(core.__all__) == len(set(core.__all__)), "duplicate names"
+
+
+def test_core_all_names_resolve():
+    for name in core.__all__:
+        assert getattr(core, name, None) is not None, name
+
+
+def test_svd_is_the_callable_front_door():
+    # `repro.core.svd` must resolve to the function, not be shadowed by
+    # the submodule of the same name
+    assert callable(core.svd)
+    assert core.svd.__doc__.lstrip().startswith("Truncated SVD")
+
+
+def test_svdconfig_field_snapshot():
+    fields = {f.name: f.default for f in dataclasses.fields(SVDConfig)}
+    assert fields == EXPECTED_CONFIG_FIELDS
+
+
+def test_svdconfig_frozen_and_hashable():
+    cfg = SVDConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.eps = 1.0
+    assert hash(cfg) == hash(SVDConfig())
+    assert cfg.replace(eps=1e-4).eps == 1e-4
+    assert cfg.eps == 1e-6  # replace() did not mutate
+
+
+def test_svdresult_field_snapshot():
+    assert SVDResult._fields == ("U", "S", "V", "iters", "passes_over_A",
+                                 "bytes_per_pass", "converged", "backend")
+
+
+@pytest.mark.parametrize("bad", [
+    {"method": "qr"},
+    {"eps": 0.0},
+    {"max_iters": 0},
+    {"warmup_q": -1},
+    {"oversample": -2},
+    {"n_blocks": 0},
+    {"block_rows": 0},
+    {"warmup_q": 1, "method": "gram"},
+    {"sweep_dtype": "bfloat16", "method": "gramfree"},
+    {"sweep_dtype": "float16"},
+])
+def test_svdconfig_validates_in_one_place(bad):
+    with pytest.raises(ValueError):
+        SVDConfig(**bad)
+
+
+def test_svdconfig_canonicalizes_sweep_dtype():
+    import jax.numpy as jnp
+    assert SVDConfig(sweep_dtype=jnp.bfloat16).sweep_dtype == "bfloat16"
+    assert SVDConfig(sweep_dtype="float32").sweep_dtype == "float32"

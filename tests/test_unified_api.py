@@ -1,0 +1,318 @@
+"""The single SVD front door: cross-backend agreement through svd(),
+unified pass accounting, and the deprecation contract of the four
+legacy entrypoint shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import (CountingHostMatrix, DenseStreamOperator,
+                        DistTSVDResult, HostBlockedMatrix, LinearOperator,
+                        OOMResult, SparseTSVDResult, SVDConfig, SVDResult,
+                        TSVDResult, dist_tsvd, oom_tsvd, sparse_tsvd,
+                        svd, tsvd)
+from repro.core.svd import _reset_legacy_warnings
+
+from conftest import make_lowrank
+
+K = 8
+SPECTRUM = np.concatenate([np.linspace(20, 2, K),
+                           2 * 0.75 ** np.arange(1, 9)])
+
+
+def _all_backends(A, k, cfg):
+    """The same config through all four operator adapters — the only
+    thing that changes per entry is the input type svd() dispatches on."""
+    mesh = make_mesh((1,), ("data",))
+    return {
+        "dense": svd(jnp.asarray(A), k, config=cfg),
+        "sharded": svd(jnp.asarray(A), k, mesh=mesh, config=cfg),
+        "hostblocked": svd(A, k, config=cfg),
+        "sparsestream": svd(DenseStreamOperator(A), k, config=cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend agreement (replaces the scattered per-path cross-checks)
+# ---------------------------------------------------------------------------
+
+def test_svd_cross_backend_agreement(rng):
+    """One prescribed-spectrum matrix through all four adapters: sigma
+    agreement with LAPACK, subspace agreement across backends, correct
+    backend tags, converged flags."""
+    A = make_lowrank(rng, 128, 64, SPECTRUM)
+    s_np = np.linalg.svd(A, compute_uv=False)[:K]
+    cfg = SVDConfig(method="block", eps=1e-8, max_iters=300, warmup_q=1)
+    results = _all_backends(A, K, cfg)
+    V_ref = np.asarray(results["dense"].V)
+    for name, r in results.items():
+        assert isinstance(r, SVDResult)
+        assert r.backend == name
+        assert r.converged, f"{name}: did not converge"
+        assert r.bytes_per_pass == A.size * 4, name
+        np.testing.assert_allclose(np.asarray(r.S), s_np, rtol=1e-3,
+                                   err_msg=name)
+        U, V = np.asarray(r.U), np.asarray(r.V)
+        np.testing.assert_allclose(U.T @ U, np.eye(K), atol=5e-3,
+                                   err_msg=f"{name} U orth")
+        np.testing.assert_allclose(V.T @ V, np.eye(K), atol=5e-3,
+                                   err_msg=f"{name} V orth")
+        # singular vectors agree with the dense backend up to sign
+        for col in range(K):
+            d = abs(float(V[:, col] @ V_ref[:, col]))
+            assert d > 0.99, f"{name} V[:, {col}] vs dense: {d}"
+
+
+def test_svd_identical_pass_accounting(rng):
+    """force_iters pins the iteration count, so the accounting is exact:
+    the two in-memory backends sweep A twice per iteration, the two
+    streamed backends fuse both halves into ONE stream — and within each
+    pair the counts are identical."""
+    A = make_lowrank(rng, 128, 64, SPECTRUM)
+    T, q = 5, 1
+    cfg = SVDConfig(method="block", eps=1e-6, max_iters=T, warmup_q=q,
+                    force_iters=True)
+    results = _all_backends(A, K, cfg)
+    for name, r in results.items():
+        assert np.all(np.asarray(r.iters) == T), name
+        assert not r.converged, name  # force_iters disables the test
+    # dense/sharded: sketch 1 + 2 per refinement + 2 per sweep + 1 extract
+    want_mem = (1 + 2 * q) + 2 * T + 1
+    # streamed: sketch 1 + 1 per fused refinement + 1 per sweep + 1 extract
+    want_stream = (1 + q) + T + 1
+    assert int(results["dense"].passes_over_A) == want_mem
+    assert int(results["sharded"].passes_over_A) == want_mem
+    assert int(results["hostblocked"].passes_over_A) == want_stream
+    assert int(results["sparsestream"].passes_over_A) == want_stream
+
+
+def test_svd_reported_passes_are_operator_ground_truth(rng):
+    """The reported count IS the operator's counter: an instrumented
+    host-blocked matrix fed straight to svd() must agree fetch-for-fetch."""
+    A = make_lowrank(rng, 120, 48, np.linspace(12, 2, 8))
+    op = CountingHostMatrix(A, 3)
+    r = svd(op, 6, method="block", eps=1e-8, max_iters=60, warmup_q=1)
+    assert r.backend == "hostblocked"
+    assert r.passes_over_A == op.passes, (r.passes_over_A, op.passes)
+    s_np = np.linalg.svd(A, compute_uv=False)[:6]
+    np.testing.assert_allclose(np.asarray(r.S), s_np, rtol=2e-3)
+
+
+def test_svd_force_iters_on_streamed_backends(rng):
+    """force_iters now exists on every backend (the legacy OOM/sparse
+    entrypoints silently lacked it): deflation runs exactly max_iters
+    per rank on both streamed backends."""
+    A = make_lowrank(rng, 64, 24, [9.0, 5.0])
+    for target in (A, DenseStreamOperator(A)):
+        r = svd(target, 2, method="gramfree", max_iters=7,
+                force_iters=True)
+        assert np.all(np.asarray(r.iters) == 7), r.backend
+        assert not r.converged
+
+
+def test_svd_config_and_overrides_compose(rng):
+    """Keyword overrides layer on top of a config and re-validate."""
+    A = make_lowrank(rng, 64, 24, [9.0, 5.0])
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    r1 = svd(jnp.asarray(A), 2, config=cfg, warmup_q=1)
+    r2 = svd(jnp.asarray(A), 2, config=cfg.replace(warmup_q=1))
+    assert np.array_equal(np.asarray(r1.U), np.asarray(r2.U))
+    assert np.array_equal(np.asarray(r1.S), np.asarray(r2.S))
+    with pytest.raises(ValueError, match="block"):
+        svd(jnp.asarray(A), 2, config=cfg, method="gram", warmup_q=1)
+
+
+def test_svd_rejects_undispatchable_input():
+    with pytest.raises(TypeError, match="dispatch"):
+        svd([[1.0, 2.0], [3.0, 4.0]], 1)
+
+
+class _NumpyOperator(LinearOperator):
+    """Minimal custom backend: the protocol's extension contract —
+    implement the abstract surface, inherit the whole solver."""
+
+    backend = "numpy-custom"
+
+    def __init__(self, A):
+        super().__init__()
+        self._A = np.asarray(A, np.float32)
+
+    @property
+    def shape(self):
+        return self._A.shape
+
+    def matmat(self, Q):
+        self._count(1)
+        return self._A @ np.asarray(Q, np.float32)
+
+    def rmatmat(self, Y):
+        self._count(1)
+        return self._A.T @ np.asarray(Y, np.float32)
+
+    def range_sketch(self, l, seed):
+        self._count(1)
+        om = np.random.default_rng(seed).standard_normal(
+            (self._A.shape[0], l)).astype(np.float32)
+        return self._A.T @ om
+
+    def random_block(self, k, seed):
+        return np.random.default_rng(seed).standard_normal(
+            (self._A.shape[1], k)).astype(np.float32)
+
+    def orth(self, X):
+        return np.linalg.qr(X)[0].astype(np.float32)
+
+    def subspace_gap(self, Q, Qn):
+        return float(Q.shape[1] - np.sum((Q.T @ Qn) ** 2))
+
+    @property
+    def bytes_per_pass(self):
+        return self._A.size * 4
+
+
+def test_custom_linear_operator_gets_full_solver(rng):
+    """A LinearOperator subclass implementing only the abstract surface
+    gets warm start, convergence, extraction, and accounting for free
+    (the defaults compose gram_chain from matmat/rmatmat: 2 passes)."""
+    # rank >= k + oversample so the oversampled iterate spans a full-rank
+    # subspace (the warm-start tests' convention)
+    A = make_lowrank(rng, 96, 40, SPECTRUM)
+    op = _NumpyOperator(A)
+    r = svd(op, 4, method="block", eps=1e-8, max_iters=300, warmup_q=1)
+    assert r.backend == "numpy-custom"
+    assert r.converged
+    s_np = np.linalg.svd(A, compute_uv=False)[:4]
+    np.testing.assert_allclose(np.asarray(r.S), s_np, rtol=1e-3)
+    # default accounting: sketch 1 + 2/refinement + 2/sweep + 1 extract
+    assert int(r.passes_over_A) == (1 + 2) + 2 * int(r.iters[0]) + 1
+    assert r.passes_over_A == op.passes
+    with pytest.raises(ValueError, match="block"):
+        svd(_NumpyOperator(A), 4, method="gramfree")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn once, bitwise-delegate, keep the old surface
+# ---------------------------------------------------------------------------
+
+def test_legacy_entrypoints_warn_exactly_once(rng):
+    A = make_lowrank(rng, 32, 16, [5.0, 1.0])
+    Aj = jnp.asarray(A)
+    mesh = make_mesh((1,), ("data",))
+    calls = {
+        "tsvd": lambda: tsvd(Aj, 2, eps=1e-6, max_iters=20),
+        "dist_tsvd": lambda: dist_tsvd(Aj, 2, mesh, eps=1e-6, max_iters=20),
+        "oom_tsvd": lambda: oom_tsvd(A, 2, eps=1e-6, max_iters=20),
+        "sparse_tsvd": lambda: sparse_tsvd(DenseStreamOperator(A), 2,
+                                           eps=1e-6, max_iters=20),
+    }
+    _reset_legacy_warnings()
+    for name, call in calls.items():
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            call()
+            call()
+        dep = [w for w in caught
+               if issubclass(w.category, DeprecationWarning)
+               and name in str(w.message)]
+        assert len(dep) == 1, f"{name}: warned {len(dep)} times"
+        assert "repro.core.svd" in str(dep[0].message)
+    _reset_legacy_warnings()
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_legacy_entrypoints_bitwise_equal_svd(rng):
+    """Each shim must return exactly (bitwise, fp32) what svd() returns
+    with the translated config — including the key->seed translation."""
+    A = make_lowrank(rng, 96, 40, SPECTRUM)
+    Aj = jnp.asarray(A)
+    mesh = make_mesh((1,), ("data",))
+    op = DenseStreamOperator(A)
+    kw = dict(method="block", eps=1e-8, max_iters=300, warmup_q=1)
+    pairs = [
+        (tsvd(Aj, 4, jax.random.PRNGKey(5), **kw),
+         svd(Aj, 4, seed=5, **kw)),
+        (tsvd(Aj, 4, jax.random.PRNGKey(0), method="gram", eps=1e-8,
+              max_iters=300),
+         svd(Aj, 4, method="gram", eps=1e-8, max_iters=300)),
+        (dist_tsvd(Aj, 4, mesh, **kw),
+         svd(Aj, 4, mesh=mesh, **kw)),
+        (oom_tsvd(A, 4, n_blocks=3, **kw),
+         svd(A, 4, n_blocks=3, **kw)),
+        (sparse_tsvd(op, 4, **kw),
+         svd(op, 4, **kw)),
+    ]
+    for old, new in pairs:
+        for field in ("U", "S", "V"):
+            got = np.asarray(getattr(old, field))
+            want = np.asarray(getattr(new, field))
+            assert np.array_equal(got, want), f"{new.backend}.{field}"
+        assert np.array_equal(np.asarray(old.iters), np.asarray(new.iters))
+        assert old.passes_over_A == new.passes_over_A
+        assert old.backend == new.backend
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_key_translation_exact_for_derived_keys(rng):
+    """key_to_seed/seed_to_key must be a lossless round trip even for
+    split/fold_in-derived keys (wide words, top bit set) — PRNGKey
+    itself truncates wide seeds to 32 bits without x64, so the rebuild
+    is word-for-word."""
+    from repro.core import key_to_seed
+    from repro.core.config import seed_to_key
+    from repro.core.config import _key_words
+
+    def roundtrip(key):
+        kd = _key_words(key).ravel()
+        kd2 = _key_words(seed_to_key(key_to_seed(key))).ravel()
+        assert np.array_equal(kd, kd2), (kd, kd2)
+
+    for key in [jax.random.PRNGKey(0), jax.random.PRNGKey(2**31 + 5),
+                jax.random.split(jax.random.PRNGKey(0))[0],
+                jax.random.fold_in(jax.random.PRNGKey(9), 123)]:
+        roundtrip(key)
+    # non-default 4-word impl: rebuilt at the active impl's key width
+    with jax.default_prng_impl("rbg"):
+        roundtrip(jax.random.PRNGKey(7))
+        roundtrip(jax.random.split(jax.random.PRNGKey(7))[0])
+    # ...and the tsvd shim stays bitwise-exact under such a key
+    A = make_lowrank(rng, 64, 32, np.linspace(9, 2, 6))
+    key = jax.random.split(jax.random.PRNGKey(0))[0]
+    old = tsvd(jnp.asarray(A), 3, key, method="block", eps=1e-8,
+               max_iters=200, warmup_q=1)
+    new = svd(jnp.asarray(A), 3, method="block", eps=1e-8, max_iters=200,
+              warmup_q=1, seed=key_to_seed(key))
+    assert np.array_equal(np.asarray(old.U), np.asarray(new.U))
+    assert np.array_equal(np.asarray(old.S), np.asarray(new.S))
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_legacy_result_surface_still_works(rng):
+    """Old field names AND old positional slicing keep working, and the
+    four legacy result types are aliases of the unified SVDResult."""
+    A = make_lowrank(rng, 48, 20, [7.0, 3.0])
+    r = tsvd(jnp.asarray(A), 2, eps=1e-8, max_iters=200)
+    for field in ("U", "S", "V", "iters", "passes_over_A"):
+        assert hasattr(r, field), field
+    U, S, V = r[:3]
+    assert U.shape == (48, 2) and S.shape == (2,) and V.shape == (20, 2)
+    assert isinstance(r, SVDResult)
+    assert (TSVDResult is SVDResult and DistTSVDResult is SVDResult
+            and OOMResult is SVDResult and SparseTSVDResult is SVDResult)
+    # legacy per-entrypoint method defaults are preserved by the shims
+    assert r.iters.shape == (2,)  # gram: per-rank deflation counts
+    r_oom = oom_tsvd(A, 2, eps=1e-8, max_iters=200)
+    assert r_oom.backend == "hostblocked"  # gramfree default
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_legacy_injected_op_and_stage_mismatch(rng):
+    A = make_lowrank(rng, 48, 20, [7.0, 3.0])
+    op = CountingHostMatrix(A, 2)
+    r = oom_tsvd(None, 2, op=op, method="block", eps=1e-8, max_iters=100)
+    assert r.passes_over_A == op.passes
+    op2 = HostBlockedMatrix(A, 2)  # fp32-staged
+    with pytest.raises(ValueError, match="stage"):
+        svd(op2, 2, method="block", sweep_dtype="bfloat16")
