@@ -10,6 +10,8 @@
                        cold vs warmup_q=1, all four paths
   precision          — mixed-precision (bf16) block sweeps: accuracy +
                        sweep time/bytes fp32 vs bf16, all four paths
+  disk_tier          — svd() on a memmap file larger than the host
+                       budget (disk->host->device byte accounting)
   roofline           — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]``
@@ -30,9 +32,9 @@ def main():
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, block_vs_deflation, oom_batching,
-                            precision, roofline, scaling_dense,
-                            scaling_sparse, warmstart)
+    from benchmarks import (accuracy, block_vs_deflation, disk_tier,
+                            oom_batching, precision, roofline,
+                            scaling_dense, scaling_sparse, warmstart)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
@@ -41,6 +43,7 @@ def main():
         "block_vs_deflation": block_vs_deflation.run,
         "warmstart": warmstart.run,
         "precision": precision.run,
+        "disk_tier": disk_tier.run,
         "roofline": roofline.run,
     }
     results = {}

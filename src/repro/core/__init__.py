@@ -6,7 +6,8 @@ The public API is the single front door::
     res = svd(A, k, method="block", warmup_q=1)          # SVDResult
 
 dispatching on the input type (jax array / array + mesh / numpy array /
-streamed sparse operator / custom ``LinearOperator``) — see
+dataset path, np.memmap or ``MemmapMatrix`` (disk tier) / scipy.sparse
+matrix / streamed sparse operator / custom ``LinearOperator``) — see
 ``core/svd.py``.  The four legacy entrypoints (``tsvd``, ``dist_tsvd``,
 ``oom_tsvd``, ``sparse_tsvd``) are deprecated shims onto it.
 """
@@ -37,9 +38,15 @@ from repro.core.operator import (  # noqa: F401
     DenseOperator,
     ShardedOperator,
     HostBlockedOperator,
+    MemmapOperator,
     SparseStreamOperator,
 )
 from repro.core.dist_svd import DistTSVDResult, dist_tsvd  # noqa: F401
+from repro.core.diskio import (  # noqa: F401
+    MemmapMatrix,
+    open_matrix_memmap,
+    stage_to_disk,
+)
 from repro.core.oom import (  # noqa: F401
     OOMResult,
     blocked_gram,
@@ -58,6 +65,9 @@ from repro.core.partition import (  # noqa: F401
 )
 from repro.core.sparse import (  # noqa: F401
     DenseStreamOperator,
+    RowBlockStream,
+    ScipySparseMatrix,
+    ScipySparseOperator,
     SparseTSVDResult,
     SyntheticSparseMatrix,
     sparse_tsvd,
@@ -75,7 +85,9 @@ __all__ = [
     "DenseOperator",
     "ShardedOperator",
     "HostBlockedOperator",
+    "MemmapOperator",
     "SparseStreamOperator",
+    "ScipySparseOperator",
     # shared numerical helpers
     "SWEEP_DTYPES",
     "resolve_sweep_dtype",
@@ -91,6 +103,11 @@ __all__ = [
     # blocked/streamed data structures
     "HostBlockedMatrix",
     "CountingHostMatrix",
+    "MemmapMatrix",
+    "stage_to_disk",
+    "open_matrix_memmap",
+    "RowBlockStream",
+    "ScipySparseMatrix",
     "SyntheticSparseMatrix",
     "DenseStreamOperator",
     "blocked_gram",

@@ -43,7 +43,8 @@ from repro.core.precision import SWEEP_DTYPES, resolve_sweep_dtype
 METHODS = ("gram", "gramfree", "block")
 
 #: backend tags reported in ``SVDResult.backend``
-BACKENDS = ("dense", "sharded", "hostblocked", "sparsestream", "operator")
+BACKENDS = ("dense", "sharded", "hostblocked", "memmap", "sparsestream",
+            "scipysparse", "operator")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,12 @@ class SVDConfig:
                      here — its step is one fused matmat.
     ``block_rows``   rows per generated block on the sparse-streamed
                      backend.
+    ``host_budget_bytes``  disk tier (memmap) only: cap on the host-side
+                     staged-block cache.  ``0`` (default) = unbounded —
+                     blocks are cached after the first cold read; ``> 0``
+                     bounds host RAM, re-reading evicted blocks from
+                     disk (LRU).  The cap covers the cache, not the one
+                     block in flight.
     ``seed``         the one RNG convention: an integer seed.
     ``faithful``     sharded deflation only: the paper's collective
                      schedule (three all-reduces per step) instead of the
@@ -92,6 +99,7 @@ class SVDConfig:
     sweep_dtype: str = "float32"
     n_blocks: int = 4
     block_rows: int = 1 << 16
+    host_budget_bytes: int = 0
     seed: int = 0
     faithful: bool = False
 
@@ -113,6 +121,9 @@ class SVDConfig:
         if self.block_rows < 1:
             raise ValueError(
                 f"block_rows must be >= 1, got {self.block_rows}")
+        if self.host_budget_bytes < 0:
+            raise ValueError(f"host_budget_bytes must be >= 0 (0 = "
+                             f"unbounded), got {self.host_budget_bytes}")
         if self.warmup_q and self.method != "block":
             raise ValueError("warmup_q > 0 requires method='block' "
                              "(deflation has no block iterate to "
@@ -138,7 +149,8 @@ class SVDResult(NamedTuple):
     The first five fields are the legacy result-tuple fields, in the
     legacy order, so both attribute access (``res.S``) and positional
     slicing (``U, S, V = res[:3]``) written against the old per-backend
-    NamedTuples keep working.
+    NamedTuples keep working.  ``bytes_moved`` is a trailing defaulted
+    field so 8-argument positional construction also keeps working.
     """
 
     U: Any                 # (m, k) left factor (row-sharded on "sharded")
@@ -150,6 +162,10 @@ class SVDResult(NamedTuple):
     converged: bool        # criterion met before max_iters (False under
     #                        force_iters: the test is disabled)
     backend: str           # one of BACKENDS
+    bytes_moved: Any = None  # per-tier total-byte breakdown for the
+    #                          solve: {"disk": ..., "host": ...,
+    #                          "device": ...} (tiers the backend touched;
+    #                          ground truth from the operator's counters)
 
 
 def key_to_seed(key) -> int:

@@ -188,6 +188,15 @@ class HostBlockedMatrix:
     the bytes; on-device accumulation stays fp32 (``_f32dot``).  The
     rounding happens once at staging time; all streamed ops then read
     the narrow copy.
+
+    The staging hop is the ONE extension point: ``host_block(b)`` returns
+    the staged host-side (numpy) copy of block ``b``; ``block(b)`` puts
+    it on device.  The disk tier (``core/diskio.py::MemmapMatrix``)
+    overrides ``host_block`` to pull the block from an ``np.memmap``
+    under a bounded host budget, and inherits every double-buffered
+    streamed op below — the prefetch of block ``b+1`` then overlaps BOTH
+    hops (disk->host read and host->device copy) with block ``b``'s
+    compute.
     """
 
     def __init__(self, A_host: np.ndarray, n_blocks: int,
@@ -211,8 +220,12 @@ class HostBlockedMatrix:
         """H2D bytes one full stream of the host blocks moves."""
         return self.m * self.n * self.stage_dtype.itemsize
 
+    def host_block(self, b: int) -> np.ndarray:
+        """Staged host-side copy of block ``b`` (already at stage_dtype)."""
+        return self._blocks[b]
+
     def block(self, b: int) -> jax.Array:
-        return jnp.asarray(self._blocks[b])
+        return jnp.asarray(self.host_block(b))
 
     def gram(self) -> jax.Array:
         """Streamed ``A^T A`` with bounded device memory."""

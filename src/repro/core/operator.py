@@ -13,9 +13,14 @@ four adapters map the repo's execution regimes onto it:
   every A-sized product is a ``shard_map`` with ONE fused psum.
 * ``HostBlockedOperator``  — wraps a ``HostBlockedMatrix``: host-resident
   row blocks streamed H2D (degree-1 out-of-core).
+* ``MemmapOperator``       — wraps a ``MemmapMatrix`` (``core/diskio.py``):
+  disk-resident row blocks staged disk->host->device under a bounded
+  host budget (the full memory hierarchy).
 * ``SparseStreamOperator`` — wraps a procedural sparse matrix (or any
   object with the streamed ``matmat``/``rmatmat``/``gram_chain``/
-  ``range_sketch`` surface, e.g. ``DenseStreamOperator``).
+  ``range_sketch`` surface, e.g. ``DenseStreamOperator`` or the scipy
+  CSR/COO adapter ``core/sparse.py::ScipySparseMatrix``; the
+  ``ScipySparseOperator`` subclass there tags real-dataset runs).
 
 The protocol:
 
@@ -41,6 +46,14 @@ The protocol:
                            is what one pass moves at the configured
                            sweep dtype, so ``passes * bytes_per_pass``
                            is the dominant data-movement cost.
+``bytes_moved``            the per-tier breakdown of that cost: total
+                           bytes each memory tier (``disk``/``host``/
+                           ``device``) has moved so far.  In-memory
+                           backends read ``A`` from device memory; the
+                           host-streamed backends move every pass over
+                           the host tier too; the memmap backend adds
+                           the disk tier (actual file-read counters, so
+                           host-cache hits show up as fewer disk bytes).
 ``lagged_sync``            True when the driver should sync the
                            convergence scalar one iteration late so the
                            host never stalls the operator's async
@@ -73,6 +86,7 @@ __all__ = [
     "DenseOperator",
     "ShardedOperator",
     "HostBlockedOperator",
+    "MemmapOperator",
     "SparseStreamOperator",
     "warm_start_width",
 ]
@@ -188,6 +202,16 @@ class LinearOperator:
         raise NotImplementedError
 
     # -- defaults the adapters may override ---------------------------------
+
+    @property
+    def bytes_moved(self) -> dict[str, int]:
+        """Total bytes moved so far, per memory tier (disk/host/device).
+
+        The default is the in-memory story: every pass reads ``A`` from
+        device memory.  Streamed adapters extend the breakdown with the
+        host (H2D) and disk tiers they actually cross.
+        """
+        return {"device": self.passes * self.bytes_per_pass}
 
     def gram_chain(self, Q):
         """``A.T @ (A @ Q)`` honoring the sweep-dtype policy.
@@ -517,6 +541,36 @@ class HostBlockedOperator(LinearOperator):
     def bytes_per_pass(self):
         return self._host.bytes_per_pass
 
+    @property
+    def bytes_moved(self):
+        # every pass crosses the host tier (H2D copy of the staged
+        # blocks) and is then read once from device memory
+        moved = self.passes * self.bytes_per_pass
+        return {"host": moved, "device": moved}
+
+
+# ---------------------------------------------------------------------------
+# MemmapOperator — disk-resident row blocks staged disk->host->device
+# ---------------------------------------------------------------------------
+
+class MemmapOperator(HostBlockedOperator):
+    """Wraps a ``MemmapMatrix`` (``core/diskio.py``): the disk tier.
+
+    Identical streaming/pass semantics to ``HostBlockedOperator`` (the
+    matrix inherits every double-buffered fused sweep), plus the disk
+    rung of the hierarchy: ``bytes_moved`` reports the matrix's ACTUAL
+    tier counters, so a host cache large enough to hold the staged
+    blocks shows one cold file read while a capped budget shows one
+    disk read per pass.  ``stage_dtype="bfloat16"`` files halve both
+    the disk and the PCIe bytes (the file stores 2-byte elements).
+    """
+
+    backend = "memmap"
+
+    @property
+    def bytes_moved(self):
+        return self._host.bytes_moved
+
 
 # ---------------------------------------------------------------------------
 # SparseStreamOperator — procedural sparse (or duck-typed streamed) matrix
@@ -591,3 +645,8 @@ class SparseStreamOperator(LinearOperator):
         sp = self._sp
         elems = getattr(sp, "nnz", sp.m * sp.n)
         return elems * np.dtype(self.sweep_dtype).itemsize
+
+    @property
+    def bytes_moved(self):
+        # the nonzero stream is generated/read and consumed on the host
+        return {"host": self.passes * self.bytes_per_pass}

@@ -1,19 +1,26 @@
-"""Block-streamed sparse operator for PB-scale synthetic matrices (paper §VI).
+"""Block-streamed sparse operators for PB-scale matrices (paper §VI).
 
 The paper decomposes a synthetic sparse matrix of *dense-equivalent* size
 128 PB (33.5M x 33.5M per node, density 1e-6, CSR ~4 GB/node).  TPUs have
 no hardware CSR path — the MXU consumes dense tiles — so we adapt the
 *insight* (never densify; stream; chain mat-vecs) rather than the format:
 
-* the matrix is defined **procedurally**: a seeded PRNG emits the nonzeros
-  of any row block on demand, so nothing matrix-shaped is ever stored;
-* mat-vecs gather only the touched columns (``nnz`` work, not ``m*n``);
-* the Alg-4 chain keeps every intermediate O(m + n + k) so the dense
-  residual never exists — exactly the paper's degree-0 escape hatch.
+* the matrix is a **source of COO row blocks**: ``RowBlockStream`` turns
+  any ``row_block_coo(lo, hi)`` provider into the full fused streamed
+  surface (``matvec``/``rmatvec``/``matmat``/``rmatmat``/``gram_chain``/
+  ``range_sketch``) — one stream of the nonzeros per call, every
+  intermediate O(m + n + k), so the dense residual never exists (the
+  paper's degree-0 escape hatch);
+* ``SyntheticSparseMatrix`` emits row blocks **procedurally** from a
+  seeded PRNG, so nothing matrix-shaped is ever stored (the 128 PB
+  setup);
+* ``ScipySparseMatrix`` emits row blocks from a REAL scipy CSR/COO
+  matrix (``.npz``/``.mtx`` datasets), so real data rides the exact same
+  fused chains — ``ScipySparseOperator`` plugs it into the shared block
+  driver behind ``repro.core.svd()``.
 
-``SyntheticSparseMatrix`` is the pure-numpy/host oracle; its
-``row_block_dense`` method feeds the same Pallas/dense paths used for the
-dense benchmarks when a block is small enough to densify for testing.
+``row_block_dense`` feeds the same Pallas/dense paths used for the dense
+benchmarks when a block is small enough to densify for testing.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.config import SVDConfig, SVDResult
+from repro.core.operator import SparseStreamOperator
 from repro.core.precision import resolve_sweep_dtype
 
 
@@ -40,66 +48,19 @@ def _round_to(x: np.ndarray, dtype) -> np.ndarray:
     return np.asarray(x, np.float32).astype(sd).astype(np.float32)
 
 
-@dataclasses.dataclass
-class SyntheticSparseMatrix:
-    """Procedural COO-ish sparse matrix: ``nnz_per_row`` uniform columns.
+class RowBlockStream:
+    """The fused streamed surface over any source of COO row blocks.
 
-    Deterministic per (seed, row): ``A[i, cols(i)] = vals(i)``.  Supports
-    matrices whose dense size is petabytes because only the accessed row
-    blocks' nonzeros are ever materialized.
+    Subclasses provide ``m``, ``n``, ``seed`` attributes and
+    ``row_block_coo(lo, hi) -> (rows, cols, vals)`` (absolute row
+    indices, O(nnz_block) memory); this base supplies every streamed
+    op the solver needs — each is ONE stream of the nonzeros with
+    O(m + n + k) intermediates, and ``gram_chain`` fuses both sweep
+    halves onto one generated/read stream.
     """
 
-    m: int
-    n: int
-    nnz_per_row: int
-    seed: int = 0
-    chunk: int = 4096  # canonical generation unit; blocking-invariant
-
-    @property
-    def density(self) -> float:
-        return self.nnz_per_row / self.n
-
-    @property
-    def dense_bytes(self) -> int:
-        return self.m * self.n * 4
-
-    @property
-    def nnz(self) -> int:
-        return self.m * self.nnz_per_row
-
-    def _chunk_coo(self, c: int):
-        """Nonzeros of canonical chunk ``c`` (rows [c*chunk, ...))."""
-        lo = c * self.chunk
-        hi = min(lo + self.chunk, self.m)
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, c]))
-        nrows = hi - lo
-        cols = rng.integers(0, self.n, size=(nrows, self.nnz_per_row))
-        vals = rng.standard_normal((nrows, self.nnz_per_row)).astype(np.float32)
-        rows = np.repeat(np.arange(lo, hi), self.nnz_per_row)
-        return rows, cols.ravel(), vals.ravel()
-
     def row_block_coo(self, lo: int, hi: int):
-        """(rows, cols, vals) for rows [lo, hi) — O(nnz_block).
-
-        Assembled from fixed canonical chunks so the matrix is identical
-        no matter how callers block it (blocking-invariance is a tested
-        invariant — the paper's batching must not change the operator).
-        An empty range (``hi <= lo`` — e.g. the trailing block of a plan
-        that over-covers ``m``) yields three empty arrays.
-        """
-        if hi <= lo:
-            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
-                    np.zeros(0, np.float32))
-        parts = []
-        c0, c1 = lo // self.chunk, (hi - 1) // self.chunk
-        for c in range(c0, c1 + 1):
-            rows, cols, vals = self._chunk_coo(c)
-            sel = (rows >= lo) & (rows < hi)
-            parts.append((rows[sel], cols[sel], vals[sel]))
-        rows = np.concatenate([p[0] for p in parts])
-        cols = np.concatenate([p[1] for p in parts])
-        vals = np.concatenate([p[2] for p in parts])
-        return rows, cols, vals
+        raise NotImplementedError
 
     def row_block_dense(self, lo: int, hi: int) -> np.ndarray:
         """Densify rows [lo, hi) — only for test-sized blocks."""
@@ -202,6 +163,134 @@ class SyntheticSparseMatrix:
             y = _round_to(y, dtype)
             np.add.at(out, cols, vs[:, None] * y[rows - lo])
         return out
+
+
+@dataclasses.dataclass
+class SyntheticSparseMatrix(RowBlockStream):
+    """Procedural COO-ish sparse matrix: ``nnz_per_row`` uniform columns.
+
+    Deterministic per (seed, row): ``A[i, cols(i)] = vals(i)``.  Supports
+    matrices whose dense size is petabytes because only the accessed row
+    blocks' nonzeros are ever materialized.
+    """
+
+    m: int
+    n: int
+    nnz_per_row: int
+    seed: int = 0
+    chunk: int = 4096  # canonical generation unit; blocking-invariant
+
+    @property
+    def density(self) -> float:
+        return self.nnz_per_row / self.n
+
+    @property
+    def dense_bytes(self) -> int:
+        return self.m * self.n * 4
+
+    @property
+    def nnz(self) -> int:
+        return self.m * self.nnz_per_row
+
+    def _chunk_coo(self, c: int):
+        """Nonzeros of canonical chunk ``c`` (rows [c*chunk, ...))."""
+        lo = c * self.chunk
+        hi = min(lo + self.chunk, self.m)
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, c]))
+        nrows = hi - lo
+        cols = rng.integers(0, self.n, size=(nrows, self.nnz_per_row))
+        vals = rng.standard_normal((nrows, self.nnz_per_row)).astype(np.float32)
+        rows = np.repeat(np.arange(lo, hi), self.nnz_per_row)
+        return rows, cols.ravel(), vals.ravel()
+
+    def row_block_coo(self, lo: int, hi: int):
+        """(rows, cols, vals) for rows [lo, hi) — O(nnz_block).
+
+        Assembled from fixed canonical chunks so the matrix is identical
+        no matter how callers block it (blocking-invariance is a tested
+        invariant — the paper's batching must not change the operator).
+        An empty range (``hi <= lo`` — e.g. the trailing block of a plan
+        that over-covers ``m``) yields three empty arrays.
+        """
+        if hi <= lo:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.float32))
+        parts = []
+        c0, c1 = lo // self.chunk, (hi - 1) // self.chunk
+        for c in range(c0, c1 + 1):
+            rows, cols, vals = self._chunk_coo(c)
+            sel = (rows >= lo) & (rows < hi)
+            parts.append((rows[sel], cols[sel], vals[sel]))
+        rows = np.concatenate([p[0] for p in parts])
+        cols = np.concatenate([p[1] for p in parts])
+        vals = np.concatenate([p[2] for p in parts])
+        return rows, cols, vals
+
+
+class ScipySparseMatrix(RowBlockStream):
+    """A REAL scipy CSR/COO/CSC matrix behind the row-block stream.
+
+    The datasets the paper's sparse claims point at ship as scipy
+    ``.npz`` (``scipy.sparse.save_npz``) or MatrixMarket ``.mtx`` files;
+    this adapter slices CSR row blocks and emits them as the same COO
+    triples the procedural generator yields, so real data rides the
+    exact fused chains (and the differential suite can hold it to the
+    dense oracle's tolerances).  Requires scipy only at construction.
+    """
+
+    def __init__(self, sp_matrix, seed: int = 0):
+        try:
+            import scipy.sparse as _sps
+        except ImportError as e:  # pragma: no cover - scipy is optional
+            raise ImportError(
+                "ScipySparseMatrix requires scipy; install it or use "
+                "SyntheticSparseMatrix for procedural streams") from e
+        if not _sps.issparse(sp_matrix):
+            raise TypeError(f"expected a scipy.sparse matrix, got "
+                            f"{type(sp_matrix).__name__}")
+        # CSR gives O(1) row-block slicing; fp32 matches the sweep policy.
+        self._csr = _sps.csr_matrix(sp_matrix, dtype=np.float32)
+        self.m, self.n = self._csr.shape
+        self.seed = seed
+
+    @property
+    def nnz(self) -> int:
+        return int(self._csr.nnz)
+
+    @property
+    def dense_bytes(self) -> int:
+        return self.m * self.n * 4
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(1, self.m * self.n)
+
+    def row_block_coo(self, lo: int, hi: int):
+        if hi <= lo:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.float32))
+        blk = self._csr[lo:hi].tocoo()
+        return (np.asarray(blk.row, np.int64) + lo,
+                np.asarray(blk.col, np.int64),
+                np.asarray(blk.data, np.float32))
+
+
+class ScipySparseOperator(SparseStreamOperator):
+    """``LinearOperator`` over a real scipy sparse matrix.
+
+    Identical solver surface to ``SparseStreamOperator`` — the wrapped
+    stream is a ``ScipySparseMatrix`` instead of a procedural generator,
+    so ``repro.core.svd()`` runs scipy CSR/COO/``.npz``/``.mtx`` inputs
+    through the same fused block driver unchanged.
+    """
+
+    backend = "scipysparse"
+
+    def __init__(self, sp, *, block_rows=1 << 16, sweep_dtype="float32",
+                 seed: int = 0):
+        if not isinstance(sp, ScipySparseMatrix):
+            sp = ScipySparseMatrix(sp, seed=seed)
+        super().__init__(sp, block_rows=block_rows, sweep_dtype=sweep_dtype)
 
 
 @dataclasses.dataclass

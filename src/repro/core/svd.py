@@ -2,10 +2,13 @@
 
 ``svd(A, k, ...)`` dispatches on the input type — an in-memory jax
 array, an array plus a mesh (row-sharded), a host numpy array or
-``HostBlockedMatrix`` (out-of-core H2D streaming), a procedural sparse
-matrix (or any duck-typed streamed operator), or a custom
-``LinearOperator`` — and runs ONE shared warm-start + block-iteration
-driver against the ``core/operator.py`` protocol.  The rank-one
+``HostBlockedMatrix`` (out-of-core H2D streaming), a path /
+``np.memmap`` / ``MemmapMatrix`` (disk tier: blocks staged disk->host->
+device under a host budget), a ``scipy.sparse`` matrix (real CSR/COO
+data on the fused sparse stream), a procedural sparse matrix (or any
+duck-typed streamed operator), or a custom ``LinearOperator`` — and
+runs ONE shared warm-start + block-iteration driver against the
+``core/operator.py`` protocol.  The rank-one
 deflation methods (``method="gram"``/``"gramfree"``, the paper's
 Alg 1/2/4) remain available as per-backend engines behind the same
 front door and the same ``SVDConfig``/``SVDResult`` types.
@@ -151,7 +154,8 @@ def _dense_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
         U, S, V, iters, passes, conv = _run_block(op, k, cfg)
         if not tall:
             U, V = V, U
-        return SVDResult(U, S, V, iters, passes, bpp, conv, "dense")
+        return SVDResult(U, S, V, iters, passes, bpp, conv, "dense",
+                         bytes_moved=op.bytes_moved)
     from repro.core.tsvd import _dense_deflation
     key = seed_to_key(cfg.seed)
     U, S, V, iters, passes = _dense_deflation(
@@ -178,6 +182,7 @@ def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig) -> SVDResult:
         # the block step is one fused matmat, so it has no batching here.
         op = ShardedOperator(A, mesh, axes, sweep_dtype=cfg.sweep_dtype)
         U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        moved = op.bytes_moved
     else:
         from repro.core.dist_svd import _dist_deflation
         U, S, V, iters, passes = _dist_deflation(
@@ -188,9 +193,11 @@ def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig) -> SVDResult:
         iters = np.asarray(iters)
         passes = int(passes)
         conv = _deflation_converged(iters, cfg)
+        moved = None            # the jitted engine has no tier counters
     if transposed:
         U, V = V, U
-    return SVDResult(U, S, V, iters, passes, bpp, conv, "sharded")
+    return SVDResult(U, S, V, iters, passes, bpp, conv, "sharded",
+                     bytes_moved=moved)
 
 
 def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
@@ -213,11 +220,13 @@ def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
     if cfg.method == "block":
         op = HostBlockedOperator(host)
         U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        moved = op.bytes_moved
     elif cfg.method == "gramfree":
         U, S, V, iters, passes = _oom_deflation(
             host, k, eps=cfg.eps, max_iters=cfg.max_iters,
             force_iters=cfg.force_iters, seed=cfg.seed)
         conv = _deflation_converged(iters, cfg)
+        moved = None            # plain host matrices have no counters
     else:
         raise ValueError("method='gram' is not available on the "
                          "out-of-core backend (the dense residual would "
@@ -226,16 +235,64 @@ def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
     if transposed:
         U, V = V, U
     return SVDResult(U, S, V, np.asarray(iters), passes,
-                     host.bytes_per_pass, conv, "hostblocked")
+                     host.bytes_per_pass, conv, "hostblocked",
+                     bytes_moved=moved)
 
 
-def _sparsestream_svd(sp, k: int, cfg: SVDConfig) -> SVDResult:
+def _memmap_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+    """Disk tier: ``A`` is a ``.npy`` path, an ``np.memmap``, or a
+    pre-built ``MemmapMatrix`` — blocks are staged disk->host->device
+    under ``cfg.host_budget_bytes`` of host cache."""
+    from repro.core.diskio import MemmapMatrix
+    from repro.core.oom import _oom_deflation
+    from repro.core.operator import MemmapOperator
+    sd = resolve_sweep_dtype(cfg.sweep_dtype)
+    if isinstance(A, MemmapMatrix):
+        if A.stage_dtype != sd:
+            raise ValueError(
+                f"injected operator staged as {A.stage_dtype.name} but "
+                f"sweep_dtype={sd.name!r}; build the operator with "
+                f"stage_dtype={sd.name!r}")
+        host, transposed = A, False        # injected ops are already tall
+    else:
+        if isinstance(A, (str,)) or hasattr(A, "__fspath__"):
+            from repro.core.diskio import open_matrix_memmap
+            A = open_matrix_memmap(A)
+        m, n = A.shape
+        transposed = m < n                 # CSVD orientation: row-block
+        src = A.T if transposed else A     # the tall view of the memmap
+        host = MemmapMatrix(src, cfg.n_blocks, stage_dtype=sd,
+                            host_budget_bytes=cfg.host_budget_bytes)
+    if cfg.method == "block":
+        op = MemmapOperator(host)
+        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+    elif cfg.method == "gramfree":
+        U, S, V, iters, passes = _oom_deflation(
+            host, k, eps=cfg.eps, max_iters=cfg.max_iters,
+            force_iters=cfg.force_iters, seed=cfg.seed)
+        conv = _deflation_converged(iters, cfg)
+    else:
+        raise ValueError("method='gram' is not available on the disk "
+                         "tier (the dense residual would defeat the "
+                         "streaming); expected 'gramfree' | 'block'")
+    if transposed:
+        U, V = V, U
+    # tier counters live on the matrix, so BOTH methods report the
+    # actual disk/host/device breakdown
+    return SVDResult(U, S, V, np.asarray(iters), passes,
+                     host.bytes_per_pass, conv, "memmap",
+                     bytes_moved=host.bytes_moved)
+
+
+def _sparsestream_svd(sp, k: int, cfg: SVDConfig,
+                      op_cls=SparseStreamOperator) -> SVDResult:
     from repro.core.sparse import _sparse_deflation
     if cfg.method == "block":
-        op = SparseStreamOperator(sp, block_rows=cfg.block_rows,
-                                  sweep_dtype=cfg.sweep_dtype)
+        op = op_cls(sp, block_rows=cfg.block_rows,
+                    sweep_dtype=cfg.sweep_dtype)
         U, S, V, iters, passes, conv = _run_block(op, k, cfg)
         bpp = op.bytes_per_pass
+        moved = op.bytes_moved
     elif cfg.method == "gramfree":
         U, S, V, iters, passes = _sparse_deflation(
             sp, k, eps=cfg.eps, max_iters=cfg.max_iters,
@@ -243,13 +300,44 @@ def _sparsestream_svd(sp, k: int, cfg: SVDConfig) -> SVDResult:
             block_rows=cfg.block_rows)
         conv = _deflation_converged(iters, cfg)
         # deflation is always fp32; one source of truth for the pass size
-        bpp = SparseStreamOperator(sp).bytes_per_pass
+        bpp = op_cls(sp).bytes_per_pass
+        moved = None            # the engine streams outside the operator
     else:
         raise ValueError("method='gram' is not available on the "
                          "sparse-streamed backend (the Gram matrix would "
                          "densify); expected 'gramfree' | 'block'")
     return SVDResult(U, S, V, np.asarray(iters), passes, bpp, conv,
-                     "sparsestream")
+                     op_cls.backend, bytes_moved=moved)
+
+
+def _scipysparse_svd(sp, k: int, cfg: SVDConfig) -> SVDResult:
+    """Real scipy CSR/COO/CSC input on the fused sparse stream."""
+    from repro.core.sparse import ScipySparseMatrix, ScipySparseOperator
+    if not isinstance(sp, ScipySparseMatrix):
+        sp = ScipySparseMatrix(sp, seed=cfg.seed)
+    return _sparsestream_svd(sp, k, cfg, op_cls=ScipySparseOperator)
+
+
+#: dataset-file suffixes svd() accepts as path inputs
+_PATH_SUFFIXES = (".npy", ".npz", ".mtx", ".mtx.gz")
+
+
+def _path_svd(path, k: int, cfg: SVDConfig) -> SVDResult:
+    """Dispatch a dataset path: ``.npy`` -> disk tier (memmap), scipy
+    ``.npz`` / MatrixMarket ``.mtx`` -> sparse stream."""
+    import os
+    p = os.fspath(path)
+    low = p.lower()
+    if low.endswith(".npy"):
+        return _memmap_svd(p, k, cfg)
+    if low.endswith(".npz"):
+        import scipy.sparse
+        return _scipysparse_svd(scipy.sparse.load_npz(p), k, cfg)
+    if low.endswith((".mtx", ".mtx.gz")):
+        import scipy.io
+        return _scipysparse_svd(scipy.io.mmread(p).tocsr(), k, cfg)
+    raise ValueError(
+        f"svd() path input must end in one of {_PATH_SUFFIXES}, got {p!r}")
 
 
 def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
@@ -263,7 +351,8 @@ def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
             f"config says {cfg.sweep_dtype!r}; rebuild one of them")
     U, S, V, iters, passes, conv = _run_block(op, k, cfg)
     return SVDResult(U, S, V, iters, passes, op.bytes_per_pass, conv,
-                     getattr(op, "backend", "operator"))
+                     getattr(op, "backend", "operator"),
+                     bytes_moved=op.bytes_moved)
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +374,14 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
       H2D one at a time;
     * ``HostBlockedMatrix``                 -> out-of-core on a pre-built
       (possibly instrumented, possibly bf16-staged) host operator;
+    * a path (``str``/``os.PathLike``)      -> dataset file: ``.npy`` is
+      memory-mapped onto the disk tier, scipy ``.npz`` and MatrixMarket
+      ``.mtx``/``.mtx.gz`` load onto the sparse stream;
+    * ``np.memmap`` / ``MemmapMatrix``      -> disk tier: row blocks are
+      staged disk->host->device on demand, the host cache capped at
+      ``host_budget_bytes`` (so matrices larger than host RAM stream);
+    * ``scipy.sparse`` CSR/COO/CSC          -> real sparse data on the
+      fused streamed chains;
     * ``SyntheticSparseMatrix`` (or any object with the streamed
       ``matmat``/``rmatmat``/``gram_chain``/``range_sketch`` surface)
       -> sparse-streamed host solve;
@@ -299,8 +396,9 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
                   mesh=mesh)
 
     Returns an ``SVDResult`` (U, S, V, iters, passes_over_A,
-    bytes_per_pass, converged, backend).
+    bytes_per_pass, converged, backend, bytes_moved).
     """
+    import os
     cfg = config if config is not None else SVDConfig()
     if overrides:
         cfg = cfg.replace(**overrides)
@@ -310,16 +408,41 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
         return _operator_svd(A, k, cfg)
     if isinstance(A, jax.Array):
         return _dense_svd(A, k, cfg)
+    if isinstance(A, (str, os.PathLike)):
+        return _path_svd(A, k, cfg)
+    if _is_scipy_sparse(A):
+        return _scipysparse_svd(A, k, cfg)
+    # np.memmap subclasses np.ndarray and MemmapMatrix subclasses
+    # HostBlockedMatrix: the disk-tier checks must come FIRST.
+    if isinstance(A, np.memmap):
+        return _memmap_svd(A, k, cfg)
     if isinstance(A, np.ndarray):
         return _hostblocked_svd(A, k, cfg)
+    from repro.core.diskio import MemmapMatrix
     from repro.core.oom import HostBlockedMatrix
+    if isinstance(A, MemmapMatrix):
+        return _memmap_svd(A, k, cfg)
     if isinstance(A, HostBlockedMatrix):
         return _hostblocked_svd(A, k, cfg)
+    from repro.core.sparse import ScipySparseMatrix
+    if isinstance(A, ScipySparseMatrix):
+        return _scipysparse_svd(A, k, cfg)
     if all(hasattr(A, attr) for attr in
            ("matmat", "rmatmat", "gram_chain", "range_sketch")):
         return _sparsestream_svd(A, k, cfg)
     raise TypeError(
         f"svd() cannot dispatch on input of type {type(A).__name__}: "
         "expected a jax array (serial), an array plus mesh= (sharded), "
-        "a numpy array or HostBlockedMatrix (out-of-core), a streamed "
-        "sparse operator, or a LinearOperator")
+        "a numpy array or HostBlockedMatrix (out-of-core), a .npy/.npz/"
+        ".mtx path, np.memmap, or MemmapMatrix (disk tier), a "
+        "scipy.sparse matrix or streamed sparse operator, or a "
+        "LinearOperator")
+
+
+def _is_scipy_sparse(A) -> bool:
+    """True iff ``A`` is a scipy sparse matrix/array (scipy optional)."""
+    try:
+        import scipy.sparse
+    except ImportError:  # pragma: no cover - scipy is optional
+        return False
+    return scipy.sparse.issparse(A)

@@ -13,14 +13,17 @@ EXPECTED_ALL = {
     "svd", "SVDConfig", "SVDResult", "key_to_seed",
     # the operator protocol + adapters
     "LinearOperator", "DenseOperator", "ShardedOperator",
-    "HostBlockedOperator", "SparseStreamOperator",
+    "HostBlockedOperator", "MemmapOperator", "SparseStreamOperator",
+    "ScipySparseOperator",
     # shared numerical helpers
     "SWEEP_DTYPES", "resolve_sweep_dtype", "sweep_ops",
     "warm_start_width", "rayleigh_ritz", "rayleigh_ritz_from_W",
     "reconstruct", "relative_error", "svd_1d", "power_iterate_gram",
     "power_iterate_chain",
     # blocked/streamed data structures
-    "HostBlockedMatrix", "CountingHostMatrix", "SyntheticSparseMatrix",
+    "HostBlockedMatrix", "CountingHostMatrix", "MemmapMatrix",
+    "stage_to_disk", "open_matrix_memmap", "RowBlockStream",
+    "ScipySparseMatrix", "SyntheticSparseMatrix",
     "DenseStreamOperator", "blocked_gram", "tiled_gram",
     "blocked_deflated_matvec", "Partition", "make_partition", "BatchPlan",
     "make_batch_plan", "symmetric_tasks",
@@ -41,6 +44,7 @@ EXPECTED_CONFIG_FIELDS = {
     "sweep_dtype": "float32",
     "n_blocks": 4,
     "block_rows": 1 << 16,
+    "host_budget_bytes": 0,
     "seed": 0,
     "faithful": False,
 }
@@ -79,7 +83,10 @@ def test_svdconfig_frozen_and_hashable():
 
 def test_svdresult_field_snapshot():
     assert SVDResult._fields == ("U", "S", "V", "iters", "passes_over_A",
-                                 "bytes_per_pass", "converged", "backend")
+                                 "bytes_per_pass", "converged", "backend",
+                                 "bytes_moved")
+    # bytes_moved is defaulted so legacy 8-positional construction works
+    assert SVDResult._field_defaults == {"bytes_moved": None}
 
 
 @pytest.mark.parametrize("bad", [
@@ -90,6 +97,7 @@ def test_svdresult_field_snapshot():
     {"oversample": -2},
     {"n_blocks": 0},
     {"block_rows": 0},
+    {"host_budget_bytes": -1},
     {"warmup_q": 1, "method": "gram"},
     {"sweep_dtype": "bfloat16", "method": "gramfree"},
     {"sweep_dtype": "float16"},

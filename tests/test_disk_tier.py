@@ -1,0 +1,226 @@
+"""Disk-tier accounting: reported passes/bytes vs instrumented ground truth.
+
+The ``SVDResult`` accounting (``passes_over_A``, ``bytes_per_pass``, and
+the new per-tier ``bytes_moved`` breakdown) must be ground truth BY
+CONSTRUCTION: the operator counts what it actually streamed, and these
+tests pin the counts against (a) the analytic pass formulas and (b) an
+independently instrumented matrix (the ``CountingHostMatrix`` pattern
+extended to count actual memmap block reads and sparse nonzero streams).
+Also covered: the host-budget cache semantics (unbounded = one cold file
+read; capped = one disk read per pass; the budget is never exceeded),
+the bf16 ``stage_dtype`` halving of disk AND H2D bytes, and the
+end-to-end acceptance case — a matrix larger than the configured host
+budget factorized via ``svd()`` on a path.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MemmapMatrix, MemmapOperator, SVDConfig,
+                        open_matrix_memmap, stage_to_disk, svd)
+
+from conftest import make_lowrank
+
+try:
+    import scipy.sparse as _sps
+    HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - scipy is optional
+    HAVE_SCIPY = False
+
+
+@pytest.fixture
+def lowrank(rng):
+    return make_lowrank(rng, 60, 24, spectrum=np.linspace(9, 3, 6))
+
+
+def staged(tmp_path, A, dtype="float32"):
+    return stage_to_disk(A, os.path.join(str(tmp_path), f"A_{dtype}.npy"),
+                         dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Staging round trips
+# ---------------------------------------------------------------------------
+
+def test_stage_to_disk_roundtrip_fp32(tmp_path, rng):
+    A = rng.normal(size=(50, 11)).astype(np.float32)
+    mm = open_matrix_memmap(staged(tmp_path, A))
+    assert mm.dtype == np.float32 and mm.shape == (50, 11)
+    np.testing.assert_array_equal(np.asarray(mm), A)
+
+
+def test_stage_to_disk_roundtrip_bf16(tmp_path, rng):
+    """bf16 .npy files memmap back as bf16 (numpy reports the raw void
+    dtype under mmap_mode; open_matrix_memmap views it back)."""
+    A = rng.normal(size=(33, 9)).astype(np.float32)
+    mm = open_matrix_memmap(staged(tmp_path, A, "bfloat16"))
+    assert mm.dtype == np.dtype(jnp.bfloat16)
+    want = A.astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(mm), want)
+    assert mm.dtype.itemsize == 2            # the on-disk halving
+
+
+def test_memmap_matrix_rejects_bad_inputs(tmp_path, rng):
+    with pytest.raises(ValueError, match="2-D"):
+        MemmapMatrix(np.zeros((3,), np.float32), 2)
+    with pytest.raises(ValueError, match="host_budget_bytes"):
+        MemmapMatrix(np.zeros((4, 4), np.float32), 2, host_budget_bytes=-1)
+
+
+# ---------------------------------------------------------------------------
+# Tier counters vs analytic models
+# ---------------------------------------------------------------------------
+
+def test_unbounded_budget_reads_disk_once(tmp_path, lowrank):
+    """Default budget 0 = unbounded cache: disk bytes == ONE file read
+    no matter how many passes stream H2D."""
+    A = lowrank
+    host = MemmapMatrix(staged(tmp_path, A), 4)
+    res = svd(host, 3, method="block", force_iters=True, max_iters=9)
+    file_bytes = A.size * 4
+    assert host.disk_bytes == file_bytes
+    assert res.bytes_moved["disk"] == file_bytes
+    # every pass crosses host->device at the staged width
+    assert res.bytes_moved["host"] == res.passes_over_A * res.bytes_per_pass
+    assert res.bytes_moved["device"] == res.bytes_moved["host"]
+    assert host.h2d_bytes == res.bytes_moved["host"]
+
+
+def test_capped_budget_reads_disk_every_pass(tmp_path, lowrank):
+    """Budget below the working set: the cyclic sweep misses on every
+    fetch, so disk bytes == one file read PER pass — and the staged
+    cache never exceeds the budget (the acceptance criterion: the matrix
+    is larger than the host budget, yet svd() completes)."""
+    A = lowrank
+    file_bytes = A.size * 4
+    budget = file_bytes // 4               # < working set (4 blocks)
+    host = MemmapMatrix(staged(tmp_path, A), 4, host_budget_bytes=budget)
+    res = svd(host, 3, method="block", force_iters=True, max_iters=14)
+    assert res.bytes_moved["disk"] == res.passes_over_A * file_bytes
+    assert 0 < host.peak_host_bytes <= budget
+    # ...and the factorization is still right
+    s_ref = np.linalg.svd(A, compute_uv=False)[:3]
+    np.testing.assert_allclose(np.asarray(res.S), s_ref, rtol=2e-3)
+
+
+def test_svd_on_path_larger_than_budget_end_to_end(tmp_path, rng):
+    """Front door, path input, budget from SVDConfig: factorizes a file
+    4x larger than the allowed host cache, accounting consistent."""
+    A = make_lowrank(rng, 96, 20, spectrum=np.linspace(8, 2, 5))
+    path = staged(tmp_path, A)
+    file_bytes = A.size * 4
+    cfg = SVDConfig(force_iters=True, max_iters=10, n_blocks=6,
+                    host_budget_bytes=file_bytes // 4)
+    res = svd(path, 3, config=cfg)
+    assert res.backend == "memmap"
+    s_ref = np.linalg.svd(A, compute_uv=False)[:3]
+    np.testing.assert_allclose(np.asarray(res.S), s_ref, rtol=2e-3)
+    assert res.bytes_moved["disk"] == res.passes_over_A * file_bytes
+    assert res.bytes_moved["host"] == res.passes_over_A * res.bytes_per_pass
+
+
+def test_passes_match_instrumented_fetches(tmp_path, lowrank):
+    """The reported passes_over_A IS the matrix's own fetch counter
+    (CountingHostMatrix semantics: fetches / n_blocks), for both
+    methods on the disk tier."""
+    A = lowrank
+    path = staged(tmp_path, A)
+    for method, kw in (("block", dict(force_iters=True, max_iters=7)),
+                       ("gramfree", dict(max_iters=40))):
+        host = MemmapMatrix(path, 4)
+        res = svd(host, 2, method=method, **kw)
+        assert res.passes_over_A == host.passes
+        assert host.fetches == host.passes * host.n_blocks
+    # block-path analytic formula: cold start + T iterations + extract
+    assert svd(MemmapMatrix(path, 4), 2, method="block", force_iters=True,
+               max_iters=7).passes_over_A == 7 + 1
+    # warm start adds 1 sketch pass + q chain refinements
+    assert svd(MemmapMatrix(path, 4), 2, method="block", force_iters=True,
+               max_iters=7, warmup_q=2).passes_over_A == (1 + 2) + 7 + 1
+
+
+def test_bf16_staging_halves_disk_and_h2d(tmp_path, lowrank):
+    """stage_dtype='bfloat16' files store 2 bytes/element: both the disk
+    reads and the H2D copies move exactly half the fp32 bytes at equal
+    pass counts."""
+    A = lowrank
+    kw = dict(method="block", force_iters=True, max_iters=8)
+    r32 = svd(MemmapMatrix(staged(tmp_path, A), 4), 2, **kw)
+    r16 = svd(MemmapMatrix(staged(tmp_path, A, "bfloat16"), 4,
+                           stage_dtype="bfloat16"), 2,
+              sweep_dtype="bfloat16", **kw)
+    assert r16.passes_over_A == r32.passes_over_A   # dtype never buys passes
+    assert r16.bytes_per_pass * 2 == r32.bytes_per_pass
+    assert r16.bytes_moved["disk"] * 2 == r32.bytes_moved["disk"]
+    assert r16.bytes_moved["host"] * 2 == r32.bytes_moved["host"]
+    # bf16 operands still recover a well-separated spectrum
+    s_ref = np.linalg.svd(A, compute_uv=False)[:2]
+    np.testing.assert_allclose(np.asarray(r16.S), s_ref, rtol=2e-2)
+
+
+def test_wide_file_narrow_staging_accounts_both_widths(tmp_path, lowrank):
+    """fp32 file + bf16 staging: disk reads move 4-byte elements, the
+    H2D hop moves the narrowed 2-byte blocks."""
+    A = lowrank
+    host = MemmapMatrix(staged(tmp_path, A), 4, stage_dtype="bfloat16")
+    res = svd(host, 2, sweep_dtype="bfloat16", method="block",
+              force_iters=True, max_iters=6)
+    assert res.bytes_moved["disk"] == A.size * 4        # one cold read, wide
+    assert res.bytes_moved["host"] == res.passes_over_A * A.size * 2
+
+
+def test_injected_matrix_stage_dtype_must_match_config(tmp_path, lowrank):
+    host = MemmapMatrix(staged(tmp_path, lowrank), 4)
+    with pytest.raises(ValueError, match="staged as float32"):
+        svd(host, 2, sweep_dtype="bfloat16")
+
+
+def test_memmap_operator_protocol_counters(tmp_path, lowrank):
+    """Operator-level view: bytes_moved delegates to the matrix's actual
+    tier counters, and bytes_per_pass is the staged (H2D) width."""
+    host = MemmapMatrix(staged(tmp_path, lowrank), 4)
+    op = MemmapOperator(host)
+    assert op.backend == "memmap"
+    assert op.bytes_per_pass == host.bytes_per_pass
+    Q = np.zeros((lowrank.shape[1], 3), np.float32)
+    op.gram_chain(jnp.asarray(Q))
+    assert op.passes == 1                   # fused chain: one stream
+    assert op.bytes_moved == host.bytes_moved
+    assert op.bytes_moved["host"] == host.bytes_per_pass
+
+
+# ---------------------------------------------------------------------------
+# Sparse-stream accounting (real scipy data)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy not installed")
+def test_scipysparse_accounting_matches_instrumented_stream(rng):
+    """Extend the CountingHostMatrix pattern to the sparse stream: an
+    instrumented ScipySparseMatrix counts every nonzero it emitted; the
+    reported passes and host bytes must match exactly."""
+    from repro.core import ScipySparseMatrix, ScipySparseOperator
+
+    class CountingScipyMatrix(ScipySparseMatrix):
+        def __init__(self, sp):
+            super().__init__(sp)
+            self.nnz_streamed = 0
+
+        def row_block_coo(self, lo, hi):
+            rows, cols, vals = super().row_block_coo(lo, hi)
+            self.nnz_streamed += vals.size
+            return rows, cols, vals
+
+    S = _sps.random(80, 30, density=0.15, random_state=3,
+                    dtype=np.float32, format="csr")
+    counting = CountingScipyMatrix(S)
+    res = svd(counting, 3, method="block", force_iters=True, max_iters=6)
+    assert res.backend == "scipysparse"
+    # one pass == one stream of ALL nonzeros
+    assert counting.nnz_streamed == res.passes_over_A * counting.nnz
+    assert res.bytes_per_pass == counting.nnz * 4      # fp32 sweep
+    assert res.bytes_moved == {"host": res.passes_over_A
+                               * res.bytes_per_pass}
+    op = ScipySparseOperator(S)
+    assert op.backend == "scipysparse" and op.shape == (80, 30)

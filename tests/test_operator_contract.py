@@ -1,0 +1,243 @@
+"""Cross-backend differential suite: every ``LinearOperator`` backend
+against the ``DenseOperator`` oracle on the same matrix.
+
+The operator protocol is the repo's load-bearing abstraction — the one
+block driver (``core/svd.py::_run_block``) trusts every backend to
+compute the same ``matmat``/``rmatmat``/``gram_chain``/``range_sketch``/
+``extract`` up to fp32 rounding.  This suite pins that contract for all
+six backends (dense, sharded, hostblocked, memmap, sparsestream,
+scipysparse), including the two disk-tier backends added with
+``core/diskio.py``, plus end-to-end ``svd()`` sigma/subspace agreement
+through the front door under ``force_iters``.  Shapes are deliberately
+ragged (m not divisible by n_blocks) and the property-based cases sweep
+shapes/k via hypothesis (deterministic fallback shim when hypothesis is
+not installed).
+"""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compat import make_mesh
+from repro.core import (DenseOperator, DenseStreamOperator,
+                        HostBlockedMatrix, HostBlockedOperator,
+                        MemmapMatrix, MemmapOperator, ShardedOperator,
+                        SparseStreamOperator, stage_to_disk, svd)
+
+from conftest import make_lowrank
+
+try:
+    import scipy.sparse as _sps
+    HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - scipy is optional
+    HAVE_SCIPY = False
+
+needs_scipy = pytest.mark.skipif(not HAVE_SCIPY, reason="scipy not installed")
+
+#: every LinearOperator backend, oracle included (it must agree with
+#: itself — catches harness bugs)
+ALL_BACKENDS = ["dense", "sharded", "hostblocked", "memmap",
+                "sparsestream",
+                pytest.param("scipysparse", marks=needs_scipy)]
+
+N_BLOCKS = 4  # never divides the deliberately ragged shapes below
+
+
+def build_operator(name, A, workdir, n_blocks=N_BLOCKS):
+    """The backend's operator over the SAME fp32 tall matrix ``A``."""
+    if name == "dense":
+        return DenseOperator(jnp.asarray(A))
+    if name == "sharded":
+        return ShardedOperator(jnp.asarray(A), make_mesh((1,), ("data",)),
+                               ("data",))
+    if name == "hostblocked":
+        return HostBlockedOperator(HostBlockedMatrix(A, n_blocks))
+    if name == "memmap":
+        path = os.path.join(workdir, f"contract_{A.shape[0]}x{A.shape[1]}.npy")
+        if not os.path.exists(path):
+            stage_to_disk(A, path)
+        return MemmapOperator(MemmapMatrix(path, n_blocks))
+    if name == "sparsestream":
+        return SparseStreamOperator(DenseStreamOperator(A))
+    if name == "scipysparse":
+        from repro.core import ScipySparseOperator
+        return ScipySparseOperator(_sps.csr_matrix(A))
+    raise AssertionError(name)
+
+
+def svd_input(name, A, workdir):
+    """The front-door input that dispatches to backend ``name``."""
+    if name == "dense":
+        return jnp.asarray(A)
+    if name == "hostblocked":
+        return np.asarray(A)
+    if name == "memmap":
+        path = os.path.join(workdir, f"e2e_{A.shape[0]}x{A.shape[1]}.npy")
+        if not os.path.exists(path):
+            stage_to_disk(A, path)
+        return path
+    if name == "sparsestream":
+        return DenseStreamOperator(A)
+    if name == "scipysparse":
+        return _sps.csr_matrix(A)
+    raise AssertionError(name)  # "sharded" goes through mesh=, not here
+
+
+@pytest.fixture
+def A37(rng):
+    # 37 rows: ragged under N_BLOCKS=4 (10+10+10+7)
+    return rng.normal(size=(37, 17)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core-op agreement against the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_matmat_rmatmat_gram_chain_match_oracle(backend, A37, rng, tmp_path):
+    A = A37
+    op = build_operator(backend, A, str(tmp_path))
+    assert op.shape == A.shape
+    Q = rng.normal(size=(17, 5)).astype(np.float32)
+    Y = rng.normal(size=(37, 5)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matmat(Q)), A @ Q,
+                               rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(Y)), A.T @ Y,
+                               rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(op.gram_chain(Q)), A.T @ (A @ Q),
+                               rtol=1e-4, atol=5e-2)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_extract_matches_oracle(backend, rng, tmp_path):
+    """Rayleigh–Ritz within the SAME subspace must agree across backends
+    (deterministic given Q up to fp32 rounding and column signs)."""
+    A = make_lowrank(rng, 41, 19, spectrum=np.linspace(8, 2, 6))
+    Q, _ = np.linalg.qr(rng.normal(size=(19, 6)).astype(np.float32))
+    Q = Q.astype(np.float32)
+    oracle = DenseOperator(jnp.asarray(A))
+    Uo, So, Vo = (np.asarray(x) for x in oracle.extract(jnp.asarray(Q)))
+    op = build_operator(backend, A, str(tmp_path))
+    U, S, V = (np.asarray(x) for x in op.extract(
+        Q if isinstance(op, SparseStreamOperator) else jnp.asarray(Q)))
+    np.testing.assert_allclose(S, So, rtol=2e-4, atol=2e-3)
+    # sign-invariant factor agreement: principal angles ~ 0
+    for Xb, Xo in ((U, Uo), (V, Vo)):
+        sv = np.linalg.svd(Xo.T @ Xb, compute_uv=False)
+        assert sv.min() > 1 - 1e-3, (backend, sv)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_range_sketch_lands_in_rowspace(backend, rng, tmp_path):
+    """``A^T Omega`` columns must lie in row(A) — each backend generates
+    its own Omega, so the subspace (not the values) is the contract."""
+    spectrum = np.linspace(8, 3, 5)
+    A = make_lowrank(rng, 40, 18, spectrum=spectrum)  # exactly rank 5
+    _, _, Vt = np.linalg.svd(A, full_matrices=False)
+    Vr = Vt[:5].T                                     # row-space basis
+    op = build_operator(backend, A, str(tmp_path))
+    sketch = np.asarray(op.range_sketch(6, 3))
+    assert sketch.shape == (18, 6)
+    resid = sketch - Vr @ (Vr.T @ sketch)
+    assert np.linalg.norm(resid) < 1e-2 * np.linalg.norm(sketch), backend
+    # deterministic: same seed, same sketch
+    op2 = build_operator(backend, A, str(tmp_path))
+    np.testing.assert_allclose(np.asarray(op2.range_sketch(6, 3)), sketch,
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_pass_accounting_protocol(backend, A37, rng, tmp_path):
+    """passes/bytes_moved bookkeeping: identical counting rules on every
+    backend (chain is 1 pass on streamed backends, 2 in-memory)."""
+    op = build_operator(backend, A37, str(tmp_path))
+    assert op.passes == 0
+    Q = rng.normal(size=(17, 4)).astype(np.float32)
+    op.matmat(Q)
+    assert op.passes == 1
+    op.gram_chain(Q)
+    assert op.passes == 1 + op.chain_passes
+    moved = op.bytes_moved
+    assert isinstance(moved, dict) and moved
+    assert all(v >= 0 for v in moved.values())
+    op.reset_passes()
+    assert op.passes == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end svd() through the front door
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_svd_end_to_end_matches_dense_oracle(backend, rng, tmp_path):
+    """Same matrix, same solver knobs, force_iters: every backend's
+    sigma and right-subspace must land on the numpy ground truth."""
+    A = make_lowrank(rng, 45, 21, spectrum=np.linspace(9, 3, 6))
+    s_ref = np.linalg.svd(A, compute_uv=False)
+    _, _, Vt = np.linalg.svd(A, full_matrices=False)
+    k = 4
+    kw = dict(method="block", force_iters=True, max_iters=30)
+    if backend == "sharded":
+        res = svd(jnp.asarray(A), k, mesh=make_mesh((1,), ("data",)), **kw)
+    else:
+        res = svd(svd_input(backend, A, str(tmp_path)), k, **kw)
+    assert res.backend == backend
+    np.testing.assert_allclose(np.asarray(res.S), s_ref[:k], rtol=2e-3)
+    sv = np.linalg.svd(Vt[:k] @ np.asarray(res.V), compute_uv=False)
+    assert sv.min() > 1 - 1e-3, (backend, sv)
+    sv = np.linalg.svd(np.asarray(res.U).T @ A @ np.asarray(res.V)
+                       / np.asarray(res.S), compute_uv=False)
+    assert sv.min() > 1 - 1e-2, (backend, sv)   # U ~ A V S^-1
+    assert isinstance(res.bytes_moved, dict) and res.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# Property-based shapes/k (hypothesis; deterministic fallback shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(m_extra=st.integers(0, 23), n=st.integers(5, 20),
+       k=st.integers(1, 5), nb=st.integers(1, 6), seed=st.integers(0, 99))
+def test_streamed_backends_match_numpy_any_shape(m_extra, n, k, nb, seed):
+    """Any (ragged) shape, any block count: the host/disk/sparse streams
+    agree with numpy on the ops the driver uses."""
+    rng = np.random.default_rng(seed)
+    m = n + m_extra                     # tall by construction
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    Q = rng.normal(size=(n, k)).astype(np.float32)
+    want_mm, want_gc = A @ Q, A.T @ (A @ Q)
+    with tempfile.TemporaryDirectory() as d:
+        ops = [HostBlockedOperator(HostBlockedMatrix(A, nb)),
+               MemmapOperator(MemmapMatrix(
+                   stage_to_disk(A, os.path.join(d, "A.npy")), nb)),
+               SparseStreamOperator(DenseStreamOperator(A))]
+        if HAVE_SCIPY:
+            from repro.core import ScipySparseOperator
+            ops.append(ScipySparseOperator(_sps.csr_matrix(A)))
+        for op in ops:
+            np.testing.assert_allclose(np.asarray(op.matmat(Q)), want_mm,
+                                       rtol=1e-4, atol=2e-3)
+            np.testing.assert_allclose(np.asarray(op.gram_chain(Q)),
+                                       want_gc, rtol=1e-4, atol=5e-2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(k=st.integers(1, 6), nb=st.integers(1, 5), seed=st.integers(0, 99))
+def test_extract_any_k_matches_oracle(k, nb, seed):
+    """extract() truncation agrees with the oracle for every k."""
+    rng = np.random.default_rng(seed)
+    A = make_lowrank(rng, 33, 15, spectrum=np.linspace(9, 2, 7))
+    Q, _ = np.linalg.qr(rng.normal(size=(15, k)).astype(np.float32))
+    Q = Q.astype(np.float32)
+    oracle = DenseOperator(jnp.asarray(A))
+    _, So, _ = oracle.extract(jnp.asarray(Q))
+    with tempfile.TemporaryDirectory() as d:
+        for op in (HostBlockedOperator(HostBlockedMatrix(A, nb)),
+                   MemmapOperator(MemmapMatrix(
+                       stage_to_disk(A, os.path.join(d, "A.npy")), nb))):
+            _, S, _ = op.extract(jnp.asarray(Q))
+            np.testing.assert_allclose(np.asarray(S), np.asarray(So),
+                                       rtol=2e-4, atol=2e-3)
