@@ -8,6 +8,8 @@
                        iteration vs rank-one deflation
   warmstart          — range-finder warm start: iterations-to-convergence
                        cold vs warmup_q=1, all four paths
+  update             — svd_update() warm restarts: O(1) iterations on
+                       perturbed matrices vs a cold re-solve
   precision          — mixed-precision (bf16) block sweeps: accuracy +
                        sweep time/bytes fp32 vs bf16, all four paths
   disk_tier          — svd() on a memmap file larger than the host
@@ -34,7 +36,8 @@ def main():
 
     from benchmarks import (accuracy, block_vs_deflation, disk_tier,
                             oom_batching, precision, roofline,
-                            scaling_dense, scaling_sparse, warmstart)
+                            scaling_dense, scaling_sparse, update,
+                            warmstart)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
@@ -42,6 +45,7 @@ def main():
         "oom_batching": oom_batching.run,
         "block_vs_deflation": block_vs_deflation.run,
         "warmstart": warmstart.run,
+        "update": update.run,
         "precision": precision.run,
         "disk_tier": disk_tier.run,
         "roofline": roofline.run,

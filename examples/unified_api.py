@@ -13,7 +13,25 @@ side by side, including the per-tier ``bytes_moved`` breakdown.  The
 solver logic is written once against the ``LinearOperator`` protocol
 (``core/operator.py``); the only thing that changes per row is what the
 front door is handed.
+
+Two more legs demonstrate the resumable solver core:
+
+* **warm updates** — the matrix changes slightly and ``svd_update``
+  re-converges in O(1) block iterations from the previous factors,
+  with the per-iteration subspace-gap trajectory printed through the
+  ``on_iteration`` trace hook;
+* **kill-and-resume** — a solve is killed mid-run, and a second call
+  with the same ``checkpoint_dir`` auto-resumes from the last saved
+  ``SolverState`` to bitwise-identical sigmas with the pass accounting
+  conserved across the interruption.
+
+``--resume-demo DIR`` runs the kill-and-resume leg across two real OS
+processes (CI does exactly this): invoke once with ``--max-iters 3``
+to run a capped, checkpointed solve, then again without the cap — the
+second process resumes from DIR and verifies against an uninterrupted
+in-process reference.
 """
+import argparse
 import os
 import tempfile
 
@@ -21,7 +39,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (DenseStreamOperator, SVDConfig,
-                        SyntheticSparseMatrix, stage_to_disk, svd)
+                        SyntheticSparseMatrix, stage_to_disk, svd,
+                        svd_update)
 
 
 def main():
@@ -93,6 +112,130 @@ def main():
           f" backend={res.backend}, {int(res.passes_over_A)} passes, "
           f"converged={res.converged}")
 
+    warm_update_leg(rng)
+    kill_and_resume_leg(rng)
+
+
+def _trajectory_hook(rows):
+    """An ``on_iteration`` hook that records (it, gap, passes)."""
+    def hook(state):
+        rows.append((state.it, float(state.gap), int(state.passes)))
+    return hook
+
+
+def _print_trajectory(rows, label, head=3, tail=2):
+    shown = rows if len(rows) <= head + tail else (
+        rows[:head] + [None] + rows[-tail:])
+    for r in shown:
+        if r is None:
+            print(f"    {label} ...")
+            continue
+        it, gap, passes = r
+        print(f"    {label} it={it:>3}  gap={gap:>9.2e}  passes={passes}")
+
+
+def warm_update_leg(rng):
+    """svd_update(): the matrix changed a little — reuse the factors."""
+    A0 = _spectrum_matrix(rng)
+    A1 = A0 + 1e-4 * rng.standard_normal(A0.shape).astype(np.float32)
+
+    prev = svd(A0, 5, method="block", warmup_q=1, n_blocks=4)
+    cold_rows, warm_rows = [], []
+    cold = svd(A1, 5, method="block", warmup_q=1, n_blocks=4,
+               on_iteration=_trajectory_hook(cold_rows))
+    warm = svd_update(prev, A1, method="block", warmup_q=1, n_blocks=4,
+                      on_iteration=_trajectory_hook(warm_rows))
+
+    print("\nwarm update after a small change to A "
+          "(per-iteration subspace gap via on_iteration):")
+    _print_trajectory(cold_rows, "cold")
+    _print_trajectory(warm_rows, "warm")
+    print(f"  cold restart: {int(cold.iters[0])} iterations; "
+          f"svd_update: {int(warm.iters[0])} (seeded from previous V)")
+    assert warm.iters[0] <= 3 < cold.iters[0]
+    assert np.allclose(np.asarray(warm.S), np.asarray(cold.S), rtol=1e-4)
+
+
+def kill_and_resume_leg(rng):
+    """Kill a checkpointed solve mid-run, resume it, verify bitwise."""
+    A = _spectrum_matrix(rng)
+    kw = dict(method="block", warmup_q=1, n_blocks=4)
+    ref = svd(A, 5, **kw)
+
+    class Killed(RuntimeError):
+        pass
+
+    def kill_at_4(state):
+        if state.it == 4:
+            raise Killed
+
+    with tempfile.TemporaryDirectory() as ck:
+        try:
+            svd(A, 5, checkpoint_dir=ck, checkpoint_every=1,
+                on_iteration=kill_at_4, **kw)
+        except Killed:
+            print("\nkill-and-resume: solve killed at iteration 4 "
+                  "(checkpoint for it=4 already on disk)")
+        rows = []
+        res = svd(A, 5, checkpoint_dir=ck,
+                  on_iteration=_trajectory_hook(rows), **kw)
+        _print_trajectory(rows, "resumed")
+        bitwise = np.array_equal(np.asarray(res.S), np.asarray(ref.S))
+        print(f"  resumed from it=4 -> converged at it={int(res.iters[0])}; "
+              f"sigmas bitwise-identical to uninterrupted: {bitwise}; "
+              f"passes conserved: {res.passes_over_A} == "
+              f"{ref.passes_over_A}")
+        assert bitwise and res.passes_over_A == ref.passes_over_A
+
+
+def _spectrum_matrix(rng, m=256, n=96):
+    """Full-rank, gently decaying spectrum: slow enough cold that the
+    resumable-state legs have a trajectory worth printing."""
+    L = rng.standard_normal((m, n)).astype(np.float32)
+    U, _, Vt = np.linalg.svd(L, full_matrices=False)
+    return (U * np.linspace(6, 1, n).astype(np.float32)) @ Vt
+
+
+def resume_demo(ck_dir, max_iters):
+    """The kill-and-resume leg across two real OS processes (CI runs
+    this twice: capped, then uncapped against the same directory)."""
+    rng = np.random.default_rng(0)
+    A = _spectrum_matrix(rng)
+    kw = dict(method="block", warmup_q=1, n_blocks=4)
+    rows = []
+    extra = {"max_iters": max_iters} if max_iters else {}
+    res = svd(A, 5, checkpoint_dir=ck_dir, checkpoint_every=1,
+              on_iteration=_trajectory_hook(rows), **kw, **extra)
+    first_it = rows[0][0] if rows else int(res.iters[0])
+    resumed = first_it > 1
+    print(f"{'resumed' if resumed else 'cold start'}: iterations "
+          f"{first_it}..{int(res.iters[0])}, converged={res.converged}, "
+          f"cumulative passes={int(res.passes_over_A)}")
+    _print_trajectory(rows, "state")
+    if not res.converged:
+        print(f"budget-capped; SolverState for it={int(res.iters[0])} "
+              f"checkpointed in {ck_dir} — rerun without --max-iters "
+              "to resume")
+        return
+    ref = svd(A, 5, **kw)
+    assert np.array_equal(np.asarray(res.S), np.asarray(ref.S)), \
+        "resumed sigmas differ from the uninterrupted run"
+    assert res.passes_over_A == ref.passes_over_A, (
+        f"pass accounting not conserved: {res.passes_over_A} != "
+        f"{ref.passes_over_A}")
+    print(f"verified vs uninterrupted run: sigmas bitwise-identical, "
+          f"passes conserved ({int(res.passes_over_A)})")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--resume-demo", metavar="DIR", default=None,
+                    help="run the two-process kill-and-resume demo "
+                         "against this checkpoint directory")
+    ap.add_argument("--max-iters", type=int, default=None,
+                    help="cap the --resume-demo run's iteration budget")
+    args = ap.parse_args()
+    if args.resume_demo:
+        resume_demo(args.resume_demo, args.max_iters)
+    else:
+        main()

@@ -62,7 +62,13 @@ class CheckpointManager:
 
     # -- save / restore ------------------------------------------------------
 
-    def save(self, step: int, state) -> str:
+    def save(self, step: int, state, extra: dict | None = None) -> str:
+        """Persist ``state`` (any pytree) atomically as step ``step``.
+
+        ``extra`` — optional JSON-serializable dict stored in the step's
+        ``meta.json`` (fingerprints, provenance); read it back with
+        ``read_meta(step)["extra"]``.
+        """
         keys, vals, _ = _flatten(state)
         tmp = self._step_dir(step) + ".tmp"
         final = self._step_dir(step)
@@ -77,13 +83,21 @@ class CheckpointManager:
                 a = np.asarray(jnp.asarray(v).astype(jnp.float32))
             arrays[k] = a
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"step": step, "keys": keys}
+        if extra is not None:
+            meta["extra"] = extra
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "keys": keys}, f)
+            json.dump(meta, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)          # atomic publish
         self._gc()
         return final
+
+    def read_meta(self, step: int) -> dict:
+        """The step's ``meta.json`` (step number, leaf keys, ``extra``)."""
+        with open(os.path.join(self._step_dir(step), "meta.json")) as f:
+            return json.load(f)
 
     def restore(self, step: int, like, shardings=None):
         """Restore into the structure of ``like`` (a matching pytree).
@@ -103,11 +117,21 @@ class CheckpointManager:
             tree = jax.tree.map(
                 lambda a, s: jax.device_put(a, s), tree, shardings)
         else:
-            # cast via jnp: numpy lacks native bf16 cast paths (ml_dtypes)
+            # cast via jnp: numpy lacks native bf16 cast paths (ml_dtypes).
+            # The round-trip is container-preserving: numpy template
+            # leaves restore as numpy, jax leaves as device arrays (the
+            # host-resident solver states depend on it).
             import jax.numpy as jnp
-            tree = jax.tree.map(
-                lambda a, v: jax.device_put(jnp.asarray(a).astype(v.dtype)),
-                tree, like)
+
+            def _leaf(a, v):
+                if isinstance(v, (np.ndarray, np.generic)):
+                    dt = np.dtype(v.dtype)
+                    if dt.kind == "V" or dt.name == "bfloat16":
+                        return np.asarray(jnp.asarray(a).astype(dt))
+                    return np.asarray(a).astype(dt)  # stays 64-bit safe
+                return jax.device_put(jnp.asarray(a).astype(v.dtype))
+
+            tree = jax.tree.map(_leaf, tree, like)
         return tree
 
     def restore_latest(self, like, shardings=None):

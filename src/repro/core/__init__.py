@@ -12,6 +12,7 @@ matrix / streamed sparse operator / custom ``LinearOperator``) — see
 ``oom_tsvd``, ``sparse_tsvd``) are deprecated shims onto it.
 """
 from repro.core.config import (  # noqa: F401
+    SolverState,
     SVDConfig,
     SVDResult,
     key_to_seed,
@@ -72,13 +73,24 @@ from repro.core.sparse import (  # noqa: F401
     SyntheticSparseMatrix,
     sparse_tsvd,
 )
-from repro.core.svd import svd  # noqa: F401
+from repro.core.svd import (  # noqa: F401
+    finalize,
+    init_state,
+    step,
+    svd,
+    svd_update,
+)
 
 __all__ = [
     # the front door + its types
     "svd",
+    "svd_update",
     "SVDConfig",
     "SVDResult",
+    "SolverState",
+    "init_state",
+    "step",
+    "finalize",
     "key_to_seed",
     # the operator protocol + adapters
     "LinearOperator",

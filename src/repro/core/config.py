@@ -88,6 +88,23 @@ class SVDConfig:
     ``faithful``     sharded deflation only: the paper's collective
                      schedule (three all-reduces per step) instead of the
                      fused single-collective step.
+    ``checkpoint_dir``  block only: persist the ``SolverState`` through
+                     ``checkpoint.CheckpointManager`` (atomic step dirs)
+                     and AUTO-RESUME from ``latest_step()`` on the next
+                     call when the config/operator fingerprints match
+                     (a mismatch errors loudly).  ``None`` disables.
+    ``checkpoint_every``  save every N block iterations (``1`` = every
+                     iteration; a final state is always saved at loop
+                     exit).  Each save host-syncs the convergence
+                     scalar, trading a little pipeline lag for
+                     durability.
+    ``on_iteration``  block only: trace hook called with the new
+                     ``SolverState`` after every iteration — the one
+                     sanctioned way to observe per-iteration gap/pass/
+                     byte trajectories (benchmarks and tests use it
+                     instead of instrumenting operators ad hoc).  Note
+                     ``state.gap`` may be an unsynced device scalar;
+                     ``float()`` it only if you accept the sync.
     """
 
     method: str = "block"
@@ -102,6 +119,9 @@ class SVDConfig:
     host_budget_bytes: int = 0
     seed: int = 0
     faithful: bool = False
+    checkpoint_dir: Any = None
+    checkpoint_every: int = 1
+    on_iteration: Any = None
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -124,6 +144,17 @@ class SVDConfig:
         if self.host_budget_bytes < 0:
             raise ValueError(f"host_budget_bytes must be >= 0 (0 = "
                              f"unbounded), got {self.host_budget_bytes}")
+        if self.checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, "
+                             f"got {self.checkpoint_every}")
+        if self.checkpoint_dir is not None and self.method != "block":
+            raise ValueError("checkpoint_dir requires method='block' "
+                             "(only the block driver is a resumable "
+                             "state machine)")
+        if self.on_iteration is not None and self.method != "block":
+            raise ValueError("on_iteration requires method='block' "
+                             "(the deflation engines have no per-"
+                             "iteration SolverState to trace)")
         if self.warmup_q and self.method != "block":
             raise ValueError("warmup_q > 0 requires method='block' "
                              "(deflation has no block iterate to "
@@ -141,6 +172,130 @@ class SVDConfig:
     def replace(self, **overrides: Any) -> "SVDConfig":
         """New config with ``overrides`` applied (re-validated)."""
         return dataclasses.replace(self, **overrides)
+
+    def solver_fingerprint(self) -> str:
+        """The trajectory-defining knobs, as a stable string.
+
+        Two configs with the same fingerprint drive the block iterate
+        through the SAME sequence of states from a given ``Q0``, so a
+        checkpoint written under one may be resumed under the other.
+        Budget/tolerance knobs (``eps``, ``max_iters``, ``force_iters``)
+        and the checkpoint/trace plumbing are deliberately excluded —
+        resuming a capped run with a larger budget or a different
+        tolerance is the point of resumability.  ``n_blocks``/
+        ``block_rows`` ARE included: they reorder the streamed FP
+        accumulation, so a mismatch would break bitwise reproducibility.
+        """
+        return (f"method={self.method};warmup_q={self.warmup_q};"
+                f"oversample={self.oversample};"
+                f"sweep_dtype={self.sweep_dtype};n_blocks={self.n_blocks};"
+                f"block_rows={self.block_rows};seed={self.seed}")
+
+
+#: fixed tier keys a serialized ``SolverState`` records (absent = 0)
+STATE_TIERS = ("disk", "host", "device")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SolverState:
+    """One block-driver iteration as a first-class, serializable value.
+
+    The explicit state machine behind ``svd()`` (``core/svd.py``):
+    ``init_state(op, k, cfg) -> SolverState``, ``step(op, state, cfg) ->
+    SolverState`` (one ``gram_chain`` + orth + gap), ``finalize(op,
+    state, cfg) -> SVDResult`` (Rayleigh–Ritz extract).  Everything the
+    iteration loop used to trap in local variables lives here, which is
+    what makes warm restarts (``svd_update``), checkpoint/resume
+    (``checkpoint_dir=``), and per-iteration tracing (``on_iteration``)
+    possible on every backend.
+
+    ``Q``            the (N, l) subspace iterate, in the operator's
+                     array namespace (host numpy once serialized).
+    ``k``            target rank (``l >= k``; extraction truncates).
+    ``it``           block iterations completed so far.
+    ``prev_gap``/``gap``  the rotation-invariant subspace gaps driving
+                     the (possibly lagged) convergence test.  May be
+                     unsynced device scalars mid-run; floats once
+                     serialized.  ``None`` = not yet measured.
+    ``converged``    the criterion has been met (under ``lagged_sync``
+                     this is decided one iteration late, so the state
+                     already contains the bounded overshoot step).
+    ``passes``       cumulative A-sized operand sweeps, across resumes:
+                     each phase adds the operator-counter DELTA it
+                     caused, so totals are conserved when a run is
+                     killed and resumed in a fresh process.
+    ``bytes_moved``  cumulative per-tier byte counters, same contract.
+    ``config_fp``/``op_fp``  fingerprints of the trajectory-defining
+                     config knobs and of the operator (backend, shape,
+                     dtypes); resume refuses a checkpoint whose
+                     fingerprints do not match the live run.
+    """
+
+    Q: Any
+    k: int
+    it: int = 0
+    prev_gap: Any = None
+    gap: Any = None
+    converged: bool = False
+    passes: int = 0
+    bytes_moved: Any = None
+    config_fp: str = ""
+    op_fp: str = ""
+
+    def replace(self, **overrides: Any) -> "SolverState":
+        return dataclasses.replace(self, **overrides)
+
+    # -- host serialization (CheckpointManager-compatible array tree) -------
+
+    def to_tree(self, to_host=None) -> dict:
+        """All-array pytree for ``CheckpointManager.save`` (fingerprints
+        ride the manager's json meta, not the array tree).  ``to_host``
+        is the operator's device->numpy hop for the iterate."""
+        Qh = to_host(self.Q) if to_host is not None else self.Q
+        gap = lambda v: np.asarray(
+            np.nan if v is None else float(v), np.float64)
+        tree = {
+            "Q": np.asarray(Qh, np.float32),
+            "k": np.asarray(self.k, np.int64),
+            "it": np.asarray(self.it, np.int64),
+            "prev_gap": gap(self.prev_gap),
+            "gap": gap(self.gap),
+            "converged": np.asarray(bool(self.converged)),
+            "passes": np.asarray(int(self.passes), np.int64),
+        }
+        moved = self.bytes_moved or {}
+        for tier in STATE_TIERS:
+            tree[f"bytes_{tier}"] = np.asarray(
+                int(moved.get(tier, 0)), np.int64)
+        return tree
+
+    @classmethod
+    def from_tree(cls, tree, *, config_fp: str = "",
+                  op_fp: str = "") -> "SolverState":
+        """Inverse of ``to_tree``; ``Q`` stays host-side (the driver
+        re-enters the operator namespace via ``op.from_host``)."""
+        gap = lambda a: None if np.isnan(float(a)) else float(a)
+        moved = {t: int(tree[f"bytes_{t}"]) for t in STATE_TIERS
+                 if int(tree[f"bytes_{t}"])}
+        return cls(Q=np.asarray(tree["Q"], np.float32),
+                   k=int(tree["k"]), it=int(tree["it"]),
+                   prev_gap=gap(tree["prev_gap"]), gap=gap(tree["gap"]),
+                   converged=bool(tree["converged"]),
+                   passes=int(tree["passes"]), bytes_moved=moved,
+                   config_fp=config_fp, op_fp=op_fp)
+
+    @classmethod
+    def host_template(cls) -> dict:
+        """A ``like`` tree for ``CheckpointManager.restore`` (dtypes
+        only; array contents/shapes come from the checkpoint)."""
+        z = lambda dt: np.zeros((), dt)
+        tree = {"Q": np.zeros((0, 0), np.float32), "k": z(np.int64),
+                "it": z(np.int64), "prev_gap": z(np.float64),
+                "gap": z(np.float64), "converged": z(np.bool_),
+                "passes": z(np.int64)}
+        for tier in STATE_TIERS:
+            tree[f"bytes_{tier}"] = z(np.int64)
+        return tree
 
 
 class SVDResult(NamedTuple):

@@ -160,6 +160,14 @@ class MemmapMatrix(HostBlockedMatrix):
         return {"disk": self.disk_bytes, "host": self.h2d_bytes,
                 "device": self.h2d_bytes}
 
+    def reset_counters(self):
+        """Zero the tier counters (NOT the staged-block cache) so the
+        driver's per-solve delta accounting starts clean; a warm cache
+        legitimately shows as fewer disk bytes for the next solve."""
+        self.disk_bytes = 0
+        self.h2d_bytes = 0
+        self.fetches = 0
+
     def host_block(self, b: int) -> np.ndarray:
         blk = self._cache.get(b)
         if blk is not None:

@@ -341,6 +341,9 @@ class CountingHostMatrix(HostBlockedMatrix):
     def passes(self) -> float:
         return self.fetches / self.n_blocks
 
+    def reset_counters(self):
+        self.fetches = 0
+
 
 # ---------------------------------------------------------------------------
 # OOM deflation engine (blocked operator, single device)

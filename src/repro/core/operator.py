@@ -88,6 +88,7 @@ __all__ = [
     "HostBlockedOperator",
     "MemmapOperator",
     "SparseStreamOperator",
+    "sharded_block_step_fn",
     "warm_start_width",
 ]
 
@@ -168,6 +169,12 @@ class LinearOperator:
     def reset_passes(self):
         self._passes = 0
 
+    def reset_counters(self):
+        """Zero the pass/byte counters so a solve's delta accounting
+        starts from a clean slate (adapters wrapping counting matrices
+        forward to them)."""
+        self.reset_passes()
+
     # -- required surface ---------------------------------------------------
 
     @property
@@ -234,6 +241,27 @@ class LinearOperator:
         """Rayleigh–Ritz extraction from the converged basis: one
         ``matmat`` pass + small QR/SVD factorizations."""
         return rayleigh_ritz_from_W(self.matmat(Q), Q)
+
+    # -- solver-state round-trip (checkpoint/resume, svd_update) ------------
+
+    def to_host(self, X) -> np.ndarray:
+        """The iterate as a host fp32 numpy array (checkpoint leaves)."""
+        return np.asarray(jax.device_get(X), np.float32)
+
+    def from_host(self, W):
+        """A host fp32 array lifted into the operator's array namespace
+        (sharded adapters re-replicate/re-place it here)."""
+        return jnp.asarray(W, jnp.float32)
+
+    @property
+    def fingerprint(self) -> str:
+        """Identity of the problem this operator poses — backend, shape,
+        element/sweep dtypes.  A checkpoint written under one fingerprint
+        refuses to resume under another."""
+        m, n = self.shape
+        sd = getattr(self, "sweep_dtype", "float32")
+        return (f"{self.backend}:{int(m)}x{int(n)}:"
+                f"{np.dtype(self.dtype).name}:{sd}")
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +351,21 @@ def sharded_gram_chain_fn(mesh, axes, sweep_dtype):
         return jax.lax.psum(rmm(mm(Q)), axes)
 
     return jax.jit(gram_chain)
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_block_step_fn(mesh, axes, sweep_dtype):
+    """ONE driver block step on the sharded backend: the fused-psum gram
+    chain composed with the shared QR orthonormalization — exactly the
+    two jitted primitives ``core/svd.py::step`` dispatches per
+    iteration.  ``launch/svd_dryrun.py`` lowers THIS function, so the
+    analyzed collective schedule can't drift from the solver."""
+    chain = sharded_gram_chain_fn(mesh, axes, sweep_dtype)
+
+    def block_step(A, Q):
+        return _orth(chain(A, Q))
+
+    return jax.jit(block_step)
 
 
 @functools.lru_cache(maxsize=None)
@@ -427,6 +470,7 @@ class ShardedOperator(LinearOperator):
             raise ValueError(f"m={m} not divisible by shards={nshards}; "
                              "pad first")
         self.mesh, self.axes = mesh, axes
+        self.n_shards = nshards
         self.sweep_dtype = resolve_sweep_dtype(sweep_dtype).name
         self._A = jax.device_put(
             A, NamedSharding(mesh, _row_spec(axes)))
@@ -461,6 +505,15 @@ class ShardedOperator(LinearOperator):
     def extract(self, Q):
         self._count(1)
         return sharded_extract_fn(self.mesh, self.axes)(self._A, Q)
+
+    def from_host(self, W):
+        # the iterate is replicated across the mesh (only A is sharded)
+        return jax.device_put(jnp.asarray(W, jnp.float32),
+                              NamedSharding(self.mesh, P(None, None)))
+
+    @property
+    def fingerprint(self):
+        return super().fingerprint + f":shards={self.n_shards}"
 
     @property
     def bytes_per_pass(self):
@@ -536,6 +589,12 @@ class HostBlockedOperator(LinearOperator):
     def random_block(self, k, seed):
         return jax.random.normal(seed_to_key(seed),
                                  (self._host.n, k), jnp.float32)
+
+    def reset_counters(self):
+        self.reset_passes()
+        reset = getattr(self._host, "reset_counters", None)
+        if reset is not None:
+            reset()
 
     @property
     def bytes_per_pass(self):
@@ -639,6 +698,12 @@ class SparseStreamOperator(LinearOperator):
         W = self.matmat(Q)                 # fp32 extraction pass (counted)
         U, S, V = rayleigh_ritz_from_W(jnp.asarray(W), jnp.asarray(Q))
         return np.asarray(U), np.asarray(S), np.asarray(V)
+
+    def to_host(self, X):
+        return np.asarray(X, np.float32)   # already host-resident numpy
+
+    def from_host(self, W):
+        return np.asarray(W, np.float32)
 
     @property
     def bytes_per_pass(self):

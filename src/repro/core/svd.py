@@ -13,19 +13,37 @@ deflation methods (``method="gram"``/``"gramfree"``, the paper's
 Alg 1/2/4) remain available as per-backend engines behind the same
 front door and the same ``SVDConfig``/``SVDResult`` types.
 
-The block driver (``_run_block``) is the only copy of the solver logic:
+The block driver is the only copy of the solver logic, written as an
+explicit three-phase state machine over a serializable ``SolverState``
+(``core/config.py``) — the iteration, not the whole solve, is the unit
+of failure and of warm restart:
 
-* cold start ``Q0 = orth(random)`` or randomized range-finder warm start
-  ``Q0 = orth((A^T A)^q A^T Omega)`` with ``k + oversample`` sketch
-  columns (Halko-style; one ``range_sketch`` pass + ``q`` fused
-  ``gram_chain`` refinements);
-* subspace iteration ``Q <- orth(A^T A Q)`` with the rotation-invariant
-  subspace-gap test (sum of squared sines of principal angles — settles
-  on clustered spectra where per-column tests never do), synced one
-  iteration late on backends that ask for it (``lagged_sync`` — the H2D
-  prefetch pipeline is never stalled; overshoot bounded at one pass);
-* Rayleigh–Ritz extraction via the operator (one more pass), truncating
-  the oversampled columns.
+* ``init_state(op, k, cfg)``: cold start ``Q0 = orth(random)``,
+  randomized range-finder warm start ``Q0 = orth((A^T A)^q A^T Omega)``
+  with ``k + oversample`` sketch columns (Halko-style; one
+  ``range_sketch`` pass + ``q`` fused ``gram_chain`` refinements), a
+  caller-supplied seed subspace (``svd_update`` — the previous factors
+  aligned to the new shape, rank-b random append for new rows/cols), or
+  an auto-resumed checkpoint (``cfg.checkpoint_dir``, fingerprints
+  verified);
+* ``step(op, state, cfg)``: ONE subspace iteration ``Q <- orth(A^T A
+  Q)`` with the rotation-invariant subspace-gap test (sum of squared
+  sines of principal angles — settles on clustered spectra where
+  per-column tests never do), synced one iteration late on backends
+  that ask for it (``lagged_sync`` — the H2D prefetch pipeline is never
+  stalled; overshoot bounded at one pass).  Pure w.r.t. the operator:
+  nothing is host-synced beyond what the lagged test already floats, so
+  the jax backends keep the pipelined dispatch;
+* ``finalize(op, state, cfg)``: Rayleigh–Ritz extraction via the
+  operator (one more pass), truncating the oversampled columns.
+
+``_run_block`` composes the three phases into the one-shot loop (its
+results are bitwise-identical to the old closed loop — asserted in
+tests), checkpointing the state through ``CheckpointManager`` and
+invoking the ``cfg.on_iteration`` trace hook as it goes.  State
+accounting is delta-based (each phase adds the operator-counter delta
+it caused), so ``passes``/``bytes_moved`` totals are conserved when a
+run is killed and resumed in a fresh process.
 
 Pass accounting is the operator's own counter, so the reported
 ``passes_over_A`` is ground truth by construction (the instrumented-
@@ -45,14 +63,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import (SVDConfig, SVDResult,  # noqa: F401
-                               key_to_seed, seed_to_key)
+from repro.core.config import (SolverState, SVDConfig,  # noqa: F401
+                               SVDResult, key_to_seed, seed_to_key)
 from repro.core.operator import (DenseOperator, HostBlockedOperator,
                                  LinearOperator, ShardedOperator,
                                  SparseStreamOperator, warm_start_width)
 from repro.core.precision import resolve_sweep_dtype
 
-__all__ = ["svd", "SVDConfig", "SVDResult", "key_to_seed"]
+__all__ = ["svd", "svd_update", "init_state", "step", "finalize",
+           "SolverState", "SVDConfig", "SVDResult", "key_to_seed"]
 
 
 # ---------------------------------------------------------------------------
@@ -80,53 +99,207 @@ def _reset_legacy_warnings() -> None:
 
 
 # ---------------------------------------------------------------------------
-# The shared block-iteration driver (the only copy of the solver)
+# The shared block-iteration driver (the only copy of the solver),
+# split into an explicit init/step/finalize state machine
 # ---------------------------------------------------------------------------
 
-def _run_block(op: LinearOperator, k: int, cfg: SVDConfig):
-    """Warm start + subspace iteration + Rayleigh–Ritz on any operator.
+def _tier_delta(before: dict, after: dict) -> dict:
+    """Per-tier byte delta between two ``bytes_moved`` snapshots."""
+    return {t: int(after[t]) - int(before.get(t, 0)) for t in after}
 
-    Returns ``(U, S, V, iters, passes, converged)``; factors live in the
-    operator's array namespace, truncated to ``k`` columns.
+
+def _tier_merge(acc, delta: dict) -> dict:
+    out = dict(acc or {})
+    for t, v in delta.items():
+        out[t] = out.get(t, 0) + v
+    return out
+
+
+def _stamp(state: SolverState, op: LinearOperator, p0: int,
+           b0: dict, **updates) -> SolverState:
+    """New state with the operator-counter deltas since (p0, b0) folded
+    into the cumulative ``passes``/``bytes_moved`` accounting."""
+    return state.replace(
+        passes=state.passes + int(op.passes) - int(p0),
+        bytes_moved=_tier_merge(state.bytes_moved,
+                                _tier_delta(b0, dict(op.bytes_moved))),
+        **updates)
+
+
+def _tol(state: SolverState, cfg: SVDConfig) -> float:
+    return cfg.eps * int(state.Q.shape[1])             # eps * l_eff
+
+
+def init_state(op: LinearOperator, k: int, cfg: SVDConfig,
+               warm=None) -> SolverState:
+    """Phase 1: build the initial iterate as a first-class SolverState.
+
+    ``Q0`` comes from (in priority order) the latest matching checkpoint
+    under ``cfg.checkpoint_dir`` (auto-resume — fingerprint mismatches
+    error loudly), a caller-supplied host seed subspace ``warm`` (the
+    ``svd_update`` path: aligned to the operator shape, random rank-b
+    append for missing columns, then ``cfg.warmup_q`` fused
+    refinements), the randomized range-finder sketch (``warmup_q > 0``),
+    or a cold Gaussian block.
     """
+    cfp = cfg.solver_fingerprint()
+    ofp = op.fingerprint
+    if cfg.checkpoint_dir is not None:
+        state = _resume_state(op, k, cfg, cfp, ofp)
+        if state is not None:
+            return state
+    p0, b0 = int(op.passes), dict(op.bytes_moved)
     N = op.shape[1]
-    op.reset_passes()
-    if cfg.warmup_q > 0:
+    if warm is not None:
+        Q = op.orth(op.from_host(_align_seed(warm, N, k, cfg)))
+        for _ in range(cfg.warmup_q):                  # optional refinements
+            Q = op.orth(op.gram_chain(Q))
+    elif cfg.warmup_q > 0:
         l = warm_start_width(k, cfg.oversample, N)
         Q = op.orth(op.range_sketch(l, cfg.seed))      # sketch pass(es)
         for _ in range(cfg.warmup_q):                  # q refinements
             Q = op.orth(op.gram_chain(Q))
     else:
         Q = op.orth(op.random_block(k, cfg.seed))      # cold start: free
-    l_eff = int(Q.shape[1])
-    tol = cfg.eps * l_eff
+    return _stamp(SolverState(Q=Q, k=k, config_fp=cfp, op_fp=ofp),
+                  op, p0, b0)
 
-    it, converged, prev_gap, gap = 0, False, None, None
-    for it in range(1, cfg.max_iters + 1):
-        Qn = op.orth(op.gram_chain(Q))
-        gap = op.subspace_gap(Q, Qn)   # device scalar on jax backends
-        Q = Qn
-        if cfg.force_iters:            # paper's benchmark mode: no test
-            continue
+
+def step(op: LinearOperator, state: SolverState,
+         cfg: SVDConfig) -> SolverState:
+    """Phase 2: ONE subspace iteration — ``Q <- orth(A^T A Q)`` plus the
+    convergence bookkeeping.  Pure w.r.t. the operator (one
+    ``gram_chain``, one ``orth``, one ``subspace_gap``; the only host
+    sync is the lagged ``float()`` of the PREVIOUS gap, dispatched after
+    this iteration's work, so jax backends keep the pipelined
+    dispatch with overshoot bounded at one pass over A).
+    """
+    tol = _tol(state, cfg)
+    p0, b0 = int(op.passes), dict(op.bytes_moved)
+    Qn = op.orth(op.gram_chain(state.Q))
+    gap = op.subspace_gap(state.Q, Qn)  # device scalar on jax backends
+    converged, prev_gap = False, state.prev_gap
+    if not cfg.force_iters:            # paper's benchmark mode: no test
         if op.lagged_sync:
             # Sync the PREVIOUS gap: by the time float() runs, this
             # iteration's stream is already dispatched, so the host wait
             # can never stall the prefetch pipeline; overshoot is
             # bounded at one pass over A.
             if prev_gap is not None and float(prev_gap) <= tol:
-                converged = True
-                break
-            prev_gap = gap
+                converged = True       # this step WAS the overshoot
+            else:
+                prev_gap = gap
         elif float(gap) <= tol:
             converged = True
-            break
-    if not converged and not cfg.force_iters and gap is not None:
-        converged = bool(float(gap) <= tol)            # final (lagged) gap
+    return _stamp(state, op, p0, b0, Q=Qn, it=state.it + 1, gap=gap,
+                  prev_gap=prev_gap, converged=converged)
 
-    U, S, V = op.extract(Q)                            # one more pass
+
+def finalize(op: LinearOperator, state: SolverState,
+             cfg: SVDConfig) -> SVDResult:
+    """Phase 3: Rayleigh–Ritz extraction from the converged basis (one
+    more pass), truncating the oversampled columns.  Factors live in the
+    operator's array namespace; the per-backend assembly re-orients
+    transposed inputs and may override the bookkeeping fields."""
+    converged = state.converged
+    if not converged and not cfg.force_iters and state.gap is not None:
+        converged = bool(float(state.gap) <= _tol(state, cfg))
+    p0, b0 = int(op.passes), dict(op.bytes_moved)
+    k = state.k
+    U, S, V = op.extract(state.Q)                      # one more pass
     U, S, V = U[:, :k], S[:k], V[:, :k]                # drop oversampled
-    iters = np.full((k,), it, np.int32)
-    return U, S, V, iters, int(op.passes), converged
+    iters = np.full((k,), state.it, np.int32)
+    final = _stamp(state, op, p0, b0, converged=converged)
+    return SVDResult(U, S, V, iters, int(final.passes), op.bytes_per_pass,
+                     converged, op.backend, bytes_moved=final.bytes_moved)
+
+
+def _align_seed(W, N: int, k: int, cfg: SVDConfig) -> np.ndarray:
+    """Align a previous factor to the (N, l) iterate the operator needs.
+
+    Rows: zero-pad for appended rows/cols of ``A`` (their directions
+    re-enter through the very first ``gram_chain``), truncate for
+    removed ones.  Columns: a seed already covering ``k`` directions is
+    used AS-IS — appending fresh random columns would drag the subspace
+    gap back to cold-start territory and forfeit the O(1)-iteration
+    warm restart.  Only when ``k`` grew past the seed (rank-b append)
+    are the missing directions filled with ``oversample`` extra
+    seeded-Gaussian columns, so the new directions converge at the
+    oversampled rate while the old ones stay converged.
+    """
+    W = np.asarray(W, np.float32)
+    if W.ndim != 2:
+        raise ValueError(f"warm seed must be 2-D, got shape {W.shape}")
+    c = min(W.shape[1], N)
+    l = c if c >= k else min(k + max(cfg.oversample, 0), N)
+    out = np.zeros((N, l), np.float32)
+    r = min(N, W.shape[0])
+    out[:r, :c] = W[:r, :c]
+    if l > c:
+        rng = np.random.default_rng((int(cfg.seed) ^ 0x5EED) & (2**63 - 1))
+        out[:, c:] = rng.standard_normal((N, l - c)).astype(np.float32)
+    return out
+
+
+def _resume_state(op, k, cfg, cfp: str, ofp: str) -> SolverState | None:
+    """Load the latest checkpointed SolverState, or None if the dir has
+    none yet.  A fingerprint/rank mismatch is a hard error: silently
+    restarting (or worse, continuing someone else's trajectory) would
+    corrupt the pass accounting and the bitwise-reproducibility story."""
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(cfg.checkpoint_dir)
+    step_no = mgr.latest_step()
+    if step_no is None:
+        return None
+    extra = mgr.read_meta(step_no).get("extra", {})
+    saved_cfp = extra.get("config_fp")
+    saved_ofp = extra.get("op_fp")
+    if saved_cfp != cfp or saved_ofp != ofp:
+        raise ValueError(
+            f"checkpoint_dir={cfg.checkpoint_dir!r} step {step_no} was "
+            f"written by a different run: config fingerprint "
+            f"{saved_cfp!r} vs {cfp!r}, operator fingerprint "
+            f"{saved_ofp!r} vs {ofp!r}; point checkpoint_dir at a fresh "
+            f"directory (or delete the stale steps) to start over")
+    state = SolverState.from_tree(
+        mgr.restore(step_no, SolverState.host_template()),
+        config_fp=cfp, op_fp=ofp)
+    if state.k != k:
+        raise ValueError(
+            f"checkpoint at {cfg.checkpoint_dir!r} targets rank "
+            f"{state.k}, this call asked for rank {k}")
+    return state.replace(Q=op.from_host(state.Q))
+
+
+def _save_state(mgr, op, state: SolverState) -> None:
+    mgr.save(state.it, state.to_tree(op.to_host),
+             extra={"kind": "solver_state", "config_fp": state.config_fp,
+                    "op_fp": state.op_fp})
+
+
+def _run_block(op: LinearOperator, k: int, cfg: SVDConfig, warm=None):
+    """init/step/finalize composed into the one-shot driver loop —
+    bitwise-identical to the pre-state-machine closed loop (asserted in
+    tests/test_solver_state.py) — plus the checkpoint writes and the
+    ``on_iteration`` trace hook between steps.
+    """
+    op.reset_counters()
+    mgr = None
+    if cfg.checkpoint_dir is not None:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(cfg.checkpoint_dir)
+    state = init_state(op, k, cfg, warm=warm)
+    last_saved = state.it if state.it else None         # resumed at it
+    while not state.converged and state.it < cfg.max_iters:
+        state = step(op, state, cfg)
+        if mgr is not None and state.it % cfg.checkpoint_every == 0:
+            _save_state(mgr, op, state)                 # syncs the gap
+            last_saved = state.it
+        if cfg.on_iteration is not None:
+            cfg.on_iteration(state)
+    if mgr is not None and last_saved != state.it:
+        _save_state(mgr, op, state)                     # final state
+    return finalize(op, state, cfg)
 
 
 def _deflation_converged(iters, cfg: SVDConfig) -> bool:
@@ -143,7 +316,17 @@ def _deflation_converged(iters, cfg: SVDConfig) -> bool:
 # Per-backend assembly
 # ---------------------------------------------------------------------------
 
-def _dense_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+def _pick_seed(warm, transposed: bool):
+    """The driver iterates in the tall orientation, so the seed subspace
+    is the previous V — unless the input was transposed in, where the
+    driver's right side is the previous U."""
+    if warm is None:
+        return None
+    U_prev, V_prev = warm
+    return U_prev if transposed else V_prev
+
+
+def _dense_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     A = jnp.asarray(A, jnp.float32)
     m, n = A.shape
     bpp = m * n * jnp.dtype(cfg.sweep_dtype).itemsize
@@ -151,11 +334,10 @@ def _dense_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
         tall = m >= n
         X = A if tall else A.T
         op = DenseOperator(X, sweep_dtype=cfg.sweep_dtype)
-        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        res = _run_block(op, k, cfg, warm=_pick_seed(warm, not tall))
         if not tall:
-            U, V = V, U
-        return SVDResult(U, S, V, iters, passes, bpp, conv, "dense",
-                         bytes_moved=op.bytes_moved)
+            res = res._replace(U=res.V, V=res.U)
+        return res._replace(bytes_per_pass=bpp)
     from repro.core.tsvd import _dense_deflation
     key = seed_to_key(cfg.seed)
     U, S, V, iters, passes = _dense_deflation(
@@ -165,7 +347,8 @@ def _dense_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
                      _deflation_converged(iters, cfg), "dense")
 
 
-def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig) -> SVDResult:
+def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig,
+                 warm=None) -> SVDResult:
     A = jnp.asarray(A)
     m, n = A.shape
     transposed = m < n                      # CSVD orientation: swap out
@@ -181,26 +364,26 @@ def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig) -> SVDResult:
         # n_blocks is the OOM-staging / in-shard deflation-batching knob;
         # the block step is one fused matmat, so it has no batching here.
         op = ShardedOperator(A, mesh, axes, sweep_dtype=cfg.sweep_dtype)
-        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
-        moved = op.bytes_moved
-    else:
-        from repro.core.dist_svd import _dist_deflation
-        U, S, V, iters, passes = _dist_deflation(
-            A, k, mesh, axes=axes, method=cfg.method,
-            faithful=cfg.faithful, n_blocks=cfg.n_blocks, eps=cfg.eps,
-            max_iters=cfg.max_iters, force_iters=cfg.force_iters,
-            seed=cfg.seed)
-        iters = np.asarray(iters)
-        passes = int(passes)
-        conv = _deflation_converged(iters, cfg)
-        moved = None            # the jitted engine has no tier counters
+        res = _run_block(op, k, cfg, warm=_pick_seed(warm, transposed))
+        if transposed:
+            res = res._replace(U=res.V, V=res.U)
+        return res._replace(bytes_per_pass=bpp)
+    from repro.core.dist_svd import _dist_deflation
+    U, S, V, iters, passes = _dist_deflation(
+        A, k, mesh, axes=axes, method=cfg.method,
+        faithful=cfg.faithful, n_blocks=cfg.n_blocks, eps=cfg.eps,
+        max_iters=cfg.max_iters, force_iters=cfg.force_iters,
+        seed=cfg.seed)
+    iters = np.asarray(iters)
+    passes = int(passes)
+    conv = _deflation_converged(iters, cfg)
     if transposed:
         U, V = V, U
     return SVDResult(U, S, V, iters, passes, bpp, conv, "sharded",
-                     bytes_moved=moved)
+                     bytes_moved=None)  # jitted engine: no tier counters
 
 
-def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+def _hostblocked_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     from repro.core.oom import HostBlockedMatrix, _oom_deflation
     sd = resolve_sweep_dtype(cfg.sweep_dtype)
     if isinstance(A, HostBlockedMatrix):
@@ -219,14 +402,15 @@ def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
         host = HostBlockedMatrix(A_host, cfg.n_blocks, stage_dtype=sd)
     if cfg.method == "block":
         op = HostBlockedOperator(host)
-        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
-        moved = op.bytes_moved
+        res = _run_block(op, k, cfg, warm=_pick_seed(warm, transposed))
+        if transposed:
+            res = res._replace(U=res.V, V=res.U)
+        return res._replace(bytes_per_pass=host.bytes_per_pass)
     elif cfg.method == "gramfree":
         U, S, V, iters, passes = _oom_deflation(
             host, k, eps=cfg.eps, max_iters=cfg.max_iters,
             force_iters=cfg.force_iters, seed=cfg.seed)
         conv = _deflation_converged(iters, cfg)
-        moved = None            # plain host matrices have no counters
     else:
         raise ValueError("method='gram' is not available on the "
                          "out-of-core backend (the dense residual would "
@@ -236,10 +420,10 @@ def _hostblocked_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
         U, V = V, U
     return SVDResult(U, S, V, np.asarray(iters), passes,
                      host.bytes_per_pass, conv, "hostblocked",
-                     bytes_moved=moved)
+                     bytes_moved=None)  # plain host matrices: no counters
 
 
-def _memmap_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
+def _memmap_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     """Disk tier: ``A`` is a ``.npy`` path, an ``np.memmap``, or a
     pre-built ``MemmapMatrix`` — blocks are staged disk->host->device
     under ``cfg.host_budget_bytes`` of host cache."""
@@ -265,7 +449,10 @@ def _memmap_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
                             host_budget_bytes=cfg.host_budget_bytes)
     if cfg.method == "block":
         op = MemmapOperator(host)
-        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
+        res = _run_block(op, k, cfg, warm=_pick_seed(warm, transposed))
+        if transposed:
+            res = res._replace(U=res.V, V=res.U)
+        return res._replace(bytes_per_pass=host.bytes_per_pass)
     elif cfg.method == "gramfree":
         U, S, V, iters, passes = _oom_deflation(
             host, k, eps=cfg.eps, max_iters=cfg.max_iters,
@@ -285,14 +472,13 @@ def _memmap_svd(A, k: int, cfg: SVDConfig) -> SVDResult:
 
 
 def _sparsestream_svd(sp, k: int, cfg: SVDConfig,
-                      op_cls=SparseStreamOperator) -> SVDResult:
+                      op_cls=SparseStreamOperator, warm=None) -> SVDResult:
     from repro.core.sparse import _sparse_deflation
     if cfg.method == "block":
         op = op_cls(sp, block_rows=cfg.block_rows,
                     sweep_dtype=cfg.sweep_dtype)
-        U, S, V, iters, passes, conv = _run_block(op, k, cfg)
-        bpp = op.bytes_per_pass
-        moved = op.bytes_moved
+        # sparse never transposes in, so the seed is always the prev V
+        return _run_block(op, k, cfg, warm=_pick_seed(warm, False))
     elif cfg.method == "gramfree":
         U, S, V, iters, passes = _sparse_deflation(
             sp, k, eps=cfg.eps, max_iters=cfg.max_iters,
@@ -310,37 +496,41 @@ def _sparsestream_svd(sp, k: int, cfg: SVDConfig,
                      op_cls.backend, bytes_moved=moved)
 
 
-def _scipysparse_svd(sp, k: int, cfg: SVDConfig) -> SVDResult:
+def _scipysparse_svd(sp, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     """Real scipy CSR/COO/CSC input on the fused sparse stream."""
     from repro.core.sparse import ScipySparseMatrix, ScipySparseOperator
     if not isinstance(sp, ScipySparseMatrix):
         sp = ScipySparseMatrix(sp, seed=cfg.seed)
-    return _sparsestream_svd(sp, k, cfg, op_cls=ScipySparseOperator)
+    return _sparsestream_svd(sp, k, cfg, op_cls=ScipySparseOperator,
+                             warm=warm)
 
 
 #: dataset-file suffixes svd() accepts as path inputs
 _PATH_SUFFIXES = (".npy", ".npz", ".mtx", ".mtx.gz")
 
 
-def _path_svd(path, k: int, cfg: SVDConfig) -> SVDResult:
+def _path_svd(path, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     """Dispatch a dataset path: ``.npy`` -> disk tier (memmap), scipy
     ``.npz`` / MatrixMarket ``.mtx`` -> sparse stream."""
     import os
     p = os.fspath(path)
     low = p.lower()
     if low.endswith(".npy"):
-        return _memmap_svd(p, k, cfg)
+        return _memmap_svd(p, k, cfg, warm=warm)
     if low.endswith(".npz"):
         import scipy.sparse
-        return _scipysparse_svd(scipy.sparse.load_npz(p), k, cfg)
+        return _scipysparse_svd(scipy.sparse.load_npz(p), k, cfg,
+                                warm=warm)
     if low.endswith((".mtx", ".mtx.gz")):
         import scipy.io
-        return _scipysparse_svd(scipy.io.mmread(p).tocsr(), k, cfg)
+        return _scipysparse_svd(scipy.io.mmread(p).tocsr(), k, cfg,
+                                warm=warm)
     raise ValueError(
         f"svd() path input must end in one of {_PATH_SUFFIXES}, got {p!r}")
 
 
-def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
+def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig,
+                  warm=None) -> SVDResult:
     if cfg.method != "block":
         raise ValueError("custom LinearOperator inputs run the shared "
                          "block driver; method must be 'block'")
@@ -349,10 +539,7 @@ def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
         raise ValueError(
             f"operator was built with sweep_dtype={op_sd!r} but the "
             f"config says {cfg.sweep_dtype!r}; rebuild one of them")
-    U, S, V, iters, passes, conv = _run_block(op, k, cfg)
-    return SVDResult(U, S, V, iters, passes, op.bytes_per_pass, conv,
-                     getattr(op, "backend", "operator"),
-                     bytes_moved=op.bytes_moved)
+    return _run_block(op, k, cfg, warm=_pick_seed(warm, False))
 
 
 # ---------------------------------------------------------------------------
@@ -360,7 +547,8 @@ def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig) -> SVDResult:
 # ---------------------------------------------------------------------------
 
 def svd(A, k: int, *, mesh=None, axes=("data",),
-        config: SVDConfig | None = None, **overrides) -> SVDResult:
+        config: SVDConfig | None = None, _warm=None,
+        **overrides) -> SVDResult:
     """Truncated SVD of ``A`` to rank ``k`` — the one entry point.
 
     Dispatch on the input type:
@@ -402,34 +590,37 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
     cfg = config if config is not None else SVDConfig()
     if overrides:
         cfg = cfg.replace(**overrides)
+    if _warm is not None and cfg.method != "block":
+        raise ValueError("warm restarts (svd_update) seed the block "
+                         "iterate; method must be 'block'")
     if mesh is not None:
-        return _sharded_svd(A, k, mesh, tuple(axes), cfg)
+        return _sharded_svd(A, k, mesh, tuple(axes), cfg, warm=_warm)
     if isinstance(A, LinearOperator):
-        return _operator_svd(A, k, cfg)
+        return _operator_svd(A, k, cfg, warm=_warm)
     if isinstance(A, jax.Array):
-        return _dense_svd(A, k, cfg)
+        return _dense_svd(A, k, cfg, warm=_warm)
     if isinstance(A, (str, os.PathLike)):
-        return _path_svd(A, k, cfg)
+        return _path_svd(A, k, cfg, warm=_warm)
     if _is_scipy_sparse(A):
-        return _scipysparse_svd(A, k, cfg)
+        return _scipysparse_svd(A, k, cfg, warm=_warm)
     # np.memmap subclasses np.ndarray and MemmapMatrix subclasses
     # HostBlockedMatrix: the disk-tier checks must come FIRST.
     if isinstance(A, np.memmap):
-        return _memmap_svd(A, k, cfg)
+        return _memmap_svd(A, k, cfg, warm=_warm)
     if isinstance(A, np.ndarray):
-        return _hostblocked_svd(A, k, cfg)
+        return _hostblocked_svd(A, k, cfg, warm=_warm)
     from repro.core.diskio import MemmapMatrix
     from repro.core.oom import HostBlockedMatrix
     if isinstance(A, MemmapMatrix):
-        return _memmap_svd(A, k, cfg)
+        return _memmap_svd(A, k, cfg, warm=_warm)
     if isinstance(A, HostBlockedMatrix):
-        return _hostblocked_svd(A, k, cfg)
+        return _hostblocked_svd(A, k, cfg, warm=_warm)
     from repro.core.sparse import ScipySparseMatrix
     if isinstance(A, ScipySparseMatrix):
-        return _scipysparse_svd(A, k, cfg)
+        return _scipysparse_svd(A, k, cfg, warm=_warm)
     if all(hasattr(A, attr) for attr in
            ("matmat", "rmatmat", "gram_chain", "range_sketch")):
-        return _sparsestream_svd(A, k, cfg)
+        return _sparsestream_svd(A, k, cfg, warm=_warm)
     raise TypeError(
         f"svd() cannot dispatch on input of type {type(A).__name__}: "
         "expected a jax array (serial), an array plus mesh= (sharded), "
@@ -437,6 +628,42 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
         ".mtx path, np.memmap, or MemmapMatrix (disk tier), a "
         "scipy.sparse matrix or streamed sparse operator, or a "
         "LinearOperator")
+
+
+def svd_update(prev, A, k: int | None = None, *, mesh=None,
+               axes=("data",), config: SVDConfig | None = None,
+               **overrides) -> SVDResult:
+    """Re-decompose a perturbed ``A`` warm-started from a previous solve.
+
+    ``prev`` is the ``SVDResult`` of an earlier ``svd()`` on a nearby
+    matrix (small dense delta, appended rows/columns, grown rank) — or a
+    live/checkpointed ``SolverState``.  The block iterate is seeded with
+    the previous right factors instead of a Gaussian sketch (aligned to
+    the new shape: zero rows for appended rows/cols, a seeded random
+    rank-b append plus ``oversample`` columns when the subspace must
+    grow), so the update converges in O(1) block iterations where a
+    cold start needs tens (``benchmarks/update.py`` measures this).
+
+    ``k`` defaults to the previous rank.  Everything else — backend
+    dispatch on ``A``'s type, ``mesh=``, ``config``/``overrides`` —
+    works exactly as in ``svd()``; ``method`` must be ``'block'``.
+    """
+    if isinstance(prev, SolverState):
+        Q = np.asarray(jax.device_get(prev.Q), np.float32)
+        warm = (Q, Q)     # the iterate is already the tall right side
+        if k is None:
+            k = int(prev.k)
+    elif isinstance(prev, SVDResult):
+        warm = (np.asarray(jax.device_get(prev.U), np.float32),
+                np.asarray(jax.device_get(prev.V), np.float32))
+        if k is None:
+            k = int(np.asarray(prev.S).shape[0])
+    else:
+        raise TypeError(
+            f"svd_update() seeds from a previous SVDResult or "
+            f"SolverState, got {type(prev).__name__}")
+    return svd(A, k, mesh=mesh, axes=axes, config=config, _warm=warm,
+               **overrides)
 
 
 def _is_scipy_sparse(A) -> bool:

@@ -39,7 +39,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.compat import shard_map as _shard_map  # noqa: E402
 from repro.core.dist_svd import (_deflated_chain_step,  # noqa: E402
                                  _all_gather_inv)
-from repro.core.operator import (sharded_gram_chain_fn,  # noqa: E402
+from repro.core.operator import (sharded_block_step_fn,  # noqa: E402
+                                 sharded_gram_chain_fn,
                                  sharded_sketch_fn)
 from repro.launch.dryrun import analyze, RESULTS_DIR  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -89,26 +90,24 @@ def lower_variant(mesh, kind: str, faithful: bool):
 
 def lower_block_variant(mesh, sweep_dtype="float32"):
     """One BLOCK subspace step (method="block"): the EXACT jitted
-    ``ShardedOperator`` step the shared driver runs — the fused
-    ``psum(A_loc^T (A_loc Q))`` (ONE (n, k) collective advances all K
-    ranks) followed by the driver's QR re-orthonormalization.  Lowering
-    the driver's own function means the analyzed schedule can't drift
-    from ``repro.core.svd``.  ``sweep_dtype="bfloat16"`` lowers the
-    mixed-precision twin: both A-sized sweeps read the 2-byte shard copy
-    with fp32 MXU accumulation; the psum payload and the QR stay fp32 —
-    per-chip HBM bytes of the dominant term halve, collective bytes are
-    identical."""
+    ``ShardedOperator`` step the state-machine driver runs per
+    ``core/svd.py::step`` — ``operator.py::sharded_block_step_fn``, the
+    fused ``psum(A_loc^T (A_loc Q))`` (ONE (n, k) collective advances
+    all K ranks) composed with the driver's QR re-orthonormalization.
+    Lowering the driver's own function means the analyzed schedule can't
+    drift from ``repro.core.svd``.  ``sweep_dtype="bfloat16"`` lowers
+    the mixed-precision twin: both A-sized sweeps read the 2-byte shard
+    copy with fp32 MXU accumulation; the psum payload and the QR stay
+    fp32 — per-chip HBM bytes of the dominant term halve, collective
+    bytes are identical."""
     axes = ("data", "model")
     row_spec = P(axes, None)
-    chain = sharded_gram_chain_fn(mesh, axes, sweep_dtype)
-
-    def block_step(A, Q):
-        return jnp.linalg.qr(chain(A, Q))[0]
+    block_step = sharded_block_step_fn(mesh, axes, sweep_dtype)
 
     sds = lambda shape, spec: jax.ShapeDtypeStruct(
         shape, jnp.float32, sharding=NamedSharding(mesh, spec))
     args = (sds((M_GLOBAL, N), row_spec), sds((N, K), P(None, None)))
-    return jax.jit(block_step).lower(*args)
+    return block_step.lower(*args)
 
 
 def lower_block_warm_variant(mesh):

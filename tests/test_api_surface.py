@@ -10,7 +10,8 @@ from repro.core import SVDConfig, SVDResult
 
 EXPECTED_ALL = {
     # the front door + its types
-    "svd", "SVDConfig", "SVDResult", "key_to_seed",
+    "svd", "svd_update", "SVDConfig", "SVDResult", "SolverState",
+    "init_state", "step", "finalize", "key_to_seed",
     # the operator protocol + adapters
     "LinearOperator", "DenseOperator", "ShardedOperator",
     "HostBlockedOperator", "MemmapOperator", "SparseStreamOperator",
@@ -47,6 +48,9 @@ EXPECTED_CONFIG_FIELDS = {
     "host_budget_bytes": 0,
     "seed": 0,
     "faithful": False,
+    "checkpoint_dir": None,
+    "checkpoint_every": 1,
+    "on_iteration": None,
 }
 
 
@@ -101,6 +105,9 @@ def test_svdresult_field_snapshot():
     {"warmup_q": 1, "method": "gram"},
     {"sweep_dtype": "bfloat16", "method": "gramfree"},
     {"sweep_dtype": "float16"},
+    {"checkpoint_every": 0},
+    {"checkpoint_dir": "x", "method": "gram"},
+    {"on_iteration": print, "method": "gramfree"},
 ])
 def test_svdconfig_validates_in_one_place(bad):
     with pytest.raises(ValueError):

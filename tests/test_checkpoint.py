@@ -103,3 +103,83 @@ def test_restore_respects_dtype(tmp_path):
     restored = mgr.restore(1, state)
     assert restored["w"].dtype == jnp.bfloat16
     assert restored["s"].dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Solver-state trees (the resumable-SVD payload)
+# ---------------------------------------------------------------------------
+
+def _solver_tree():
+    """A mixed tree shaped like SolverState.to_tree: numpy leaves (the
+    host backends), a jax leaf, and an ml_dtypes bf16 leaf."""
+    rng = np.random.default_rng(0)
+    return {
+        "Q": rng.standard_normal((24, 5)).astype(np.float32),
+        "Qj": jnp.asarray(rng.standard_normal((8, 3)), jnp.float32),
+        "Qb": jnp.asarray(rng.standard_normal((8, 3)), jnp.bfloat16),
+        "it": np.asarray(7, np.int64),
+        "gap": np.asarray(3.5e-7, np.float64),
+        "passes": np.asarray(19, np.int64),
+        "converged": np.asarray(False),
+    }
+
+
+def test_solver_state_tree_roundtrip_preserves_values_and_containers(
+        tmp_path):
+    """numpy leaves restore as numpy (the sparse/host backends hand the
+    iterate straight back to numpy QR), jax leaves as device arrays,
+    bf16 losslessly through the f32 npz detour — all bitwise."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _solver_tree()
+    mgr.save(3, tree)
+    out = mgr.restore(3, tree)
+    for key in tree:
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(out[key]), np.float32)
+            if key == "Qb" else np.asarray(out[key]),
+            np.asarray(jnp.asarray(tree[key]), np.float32)
+            if key == "Qb" else np.asarray(tree[key]), err_msg=key)
+    assert isinstance(out["Q"], np.ndarray)          # container preserved
+    assert not isinstance(out["Q"], jax.Array)
+    assert isinstance(out["Qj"], jax.Array)
+    assert out["Qb"].dtype == jnp.bfloat16
+    assert out["it"].dtype == np.int64               # 64-bit survives
+    assert out["gap"].dtype == np.float64
+
+
+def test_solver_state_extra_meta_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    extra = {"kind": "solver_state", "config_fp": "method=block;seed=0",
+             "op_fp": "dense:64x16:float32:float32"}
+    mgr.save(4, _solver_tree(), extra=extra)
+    meta = mgr.read_meta(4)
+    assert meta["step"] == 4
+    assert meta["extra"] == extra
+    assert mgr.read_meta(4).get("extra", {}) == extra  # re-read is stable
+
+
+def test_solver_state_keep_pruning(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _solver_tree()
+    for it in (1, 2, 3, 4, 5):
+        mgr.save(it, tree, extra={"it": it})
+    assert mgr.all_steps() == [4, 5]
+    assert mgr.read_meta(5)["extra"]["it"] == 5
+
+
+def test_solver_state_resume_after_partial_write(tmp_path):
+    """A crash mid-save leaves step_XXXX.tmp; latest_step() must skip it
+    and the previous good state must restore bitwise."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _solver_tree()
+    mgr.save(6, tree)
+    # simulate a kill mid-save of step 7: tmp dir with a half-written npz
+    tmp7 = tmp_path / "step_00000007.tmp"
+    os.makedirs(tmp7)
+    (tmp7 / "arrays.npz").write_bytes(b"PK\x03\x04 truncated")
+    assert mgr.latest_step() == 6
+    out = mgr.restore(6, tree)
+    np.testing.assert_array_equal(out["Q"], tree["Q"])
+    # the next save of step 7 must clobber the stale tmp cleanly
+    mgr.save(7, tree)
+    assert mgr.latest_step() == 7

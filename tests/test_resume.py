@@ -1,0 +1,184 @@
+"""Checkpoint/resume through the svd() front door.
+
+The kill-and-resume contract: a run interrupted at any iteration and
+resumed from ``checkpoint_dir`` reproduces the uninterrupted run's
+sigmas EXACTLY (same fp32 bits — the state machine replays the same op
+calls), with ``passes_over_A``/``bytes_moved`` totals conserved across
+the restart (delta-based accounting: each process adds only the work it
+actually did).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (CountingHostMatrix, MemmapMatrix, SVDConfig,
+                        SyntheticSparseMatrix, stage_to_disk, svd)
+
+
+def _spectrum_matrix(rng, m=80, n=24):
+    L = rng.standard_normal((m, n)).astype(np.float32)
+    U, _, Vt = np.linalg.svd(L, full_matrices=False)
+    return (U * np.linspace(6, 1, n).astype(np.float32)) @ Vt
+
+
+KW = dict(method="block", warmup_q=1, eps=1e-7, n_blocks=3)
+
+
+def test_capped_run_resumes_to_identical_sigmas(rng, tmp_path):
+    """Budget-capped run 1 + uncapped resumed run 2 == one uninterrupted
+    run, bitwise, with pass/byte accounting conserved."""
+    A = _spectrum_matrix(rng)
+    ref = svd(A, 4, **KW)
+    assert ref.iters[0] > 5                    # the cap actually bites
+
+    ck = str(tmp_path / "ck")
+    r1 = svd(A, 4, max_iters=3, checkpoint_dir=ck, **KW)
+    assert not r1.converged and r1.iters[0] == 3
+    r2 = svd(A, 4, checkpoint_dir=ck, **KW)    # auto-resume, full budget
+    assert r2.converged
+    np.testing.assert_array_equal(np.asarray(r2.S), np.asarray(ref.S))
+    np.testing.assert_array_equal(np.asarray(r2.U), np.asarray(ref.U))
+    assert r2.iters[0] == ref.iters[0]
+    assert r2.passes_over_A == ref.passes_over_A     # conserved, not reset
+    assert r2.bytes_moved == ref.bytes_moved
+
+
+def test_kill_mid_run_conserves_pass_accounting(rng, tmp_path):
+    """Kill the loop via a raising trace hook (the checkpoint for that
+    iteration is already on disk — saves happen before the hook), resume
+    on a FRESH instrumented matrix: the two processes' physical passes
+    sum exactly to the uninterrupted run's."""
+    A = _spectrum_matrix(rng)
+    m_ref = CountingHostMatrix(A, 3)
+    ref = svd(m_ref, 4, **KW)
+
+    class Killed(RuntimeError):
+        pass
+
+    def kill_at_5(state):
+        if state.it == 5:
+            raise Killed()
+
+    ck = str(tmp_path / "ck")
+    m1 = CountingHostMatrix(A, 3)
+    with pytest.raises(Killed):
+        svd(m1, 4, checkpoint_dir=ck, on_iteration=kill_at_5, **KW)
+    m2 = CountingHostMatrix(A, 3)              # fresh process, fresh op
+    r2 = svd(m2, 4, checkpoint_dir=ck, **KW)
+
+    np.testing.assert_array_equal(np.asarray(r2.S), np.asarray(ref.S))
+    assert m1.passes + m2.passes == m_ref.passes     # split exactly
+    assert r2.passes_over_A == ref.passes_over_A     # and summed exactly
+    assert r2.bytes_moved == ref.bytes_moved
+
+
+def test_resume_on_memmap_backend(rng, tmp_path):
+    A = _spectrum_matrix(rng, 64, 20)
+    path = stage_to_disk(A, str(tmp_path / "a.npy"))
+    file_bytes = A.size * 4
+    kw = dict(method="block", warmup_q=1, eps=1e-7, n_blocks=4)
+    ref = svd(MemmapMatrix(path, 4), 4, **kw)
+    ck = str(tmp_path / "ck")
+    r1 = svd(MemmapMatrix(path, 4), 4, max_iters=2, checkpoint_dir=ck,
+             **kw)
+    assert not r1.converged
+    r2 = svd(MemmapMatrix(path, 4), 4, checkpoint_dir=ck, **kw)
+    np.testing.assert_array_equal(np.asarray(r2.S), np.asarray(ref.S))
+    assert r2.passes_over_A == ref.passes_over_A
+    # H2D/device traffic scales with passes -> conserved exactly; the
+    # disk tier honestly pays ONE extra cold file read (the restart
+    # loses run 1's host cache — real physics, not an accounting leak)
+    assert r2.bytes_moved["host"] == ref.bytes_moved["host"]
+    assert r2.bytes_moved["device"] == ref.bytes_moved["device"]
+    assert ref.bytes_moved["disk"] == file_bytes     # unbounded budget
+    assert r2.bytes_moved["disk"] == 2 * file_bytes  # + the cold re-read
+
+
+def test_resume_on_sparse_numpy_backend(rng, tmp_path):
+    """The sparse backend's state is pure numpy — the round-trip must
+    hand numpy back (no silent jax promotion) and stay bitwise."""
+    sp = SyntheticSparseMatrix(600, 40, 8, seed=3)
+    kw = dict(method="block", warmup_q=1, eps=1e-7)
+    ref = svd(sp, 4, **kw)
+    ck = str(tmp_path / "ck")
+    r1 = svd(sp, 4, max_iters=2, checkpoint_dir=ck, **kw)
+    assert not r1.converged
+    r2 = svd(sp, 4, checkpoint_dir=ck, **kw)
+    np.testing.assert_array_equal(np.asarray(r2.S), np.asarray(ref.S))
+    assert r2.passes_over_A == ref.passes_over_A
+
+
+def test_checkpoint_every_and_final_state_always_saved(rng, tmp_path):
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    res = svd(A, 4, checkpoint_dir=ck, checkpoint_every=4,
+              **{**KW, "eps": 1e-6})
+    mgr = CheckpointManager(ck)
+    steps = mgr.all_steps()
+    assert steps[-1] == res.iters[0]           # loop exit state saved
+    assert all(s % 4 == 0 for s in steps[:-1])
+    meta = mgr.read_meta(steps[-1])
+    assert meta["extra"]["kind"] == "solver_state"
+    assert "config_fp" in meta["extra"] and "op_fp" in meta["extra"]
+
+
+def test_resume_refuses_config_fingerprint_mismatch(rng, tmp_path):
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    svd(A, 4, max_iters=2, checkpoint_dir=ck, **KW)
+    with pytest.raises(ValueError, match="different run"):
+        svd(A, 4, checkpoint_dir=ck, **{**KW, "warmup_q": 2})
+    with pytest.raises(ValueError, match="different run"):
+        svd(A, 4, checkpoint_dir=ck, **{**KW, "seed": 1})
+
+
+def test_resume_refuses_operator_fingerprint_mismatch(rng, tmp_path):
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    svd(A, 4, max_iters=2, checkpoint_dir=ck, **KW)
+    B = _spectrum_matrix(rng, 96, 24)          # different shape
+    with pytest.raises(ValueError, match="different run"):
+        svd(B, 4, checkpoint_dir=ck, **KW)
+    with pytest.raises(ValueError, match="different run"):
+        svd(jnp.asarray(A), 4, checkpoint_dir=ck, **KW)  # other backend
+
+
+def test_resume_refuses_rank_mismatch(rng, tmp_path):
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    svd(A, 4, max_iters=2, checkpoint_dir=ck, **KW)
+    with pytest.raises(ValueError, match="rank"):
+        svd(A, 5, checkpoint_dir=ck, **KW)
+
+
+def test_budget_knobs_excluded_from_fingerprint(rng, tmp_path):
+    """Resuming a capped run with a LARGER budget / different tolerance
+    is the point of resumability — eps/max_iters must not fingerprint."""
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    svd(A, 4, max_iters=2, checkpoint_dir=ck, **KW)
+    r = svd(A, 4, checkpoint_dir=ck, **{**KW, "eps": 1e-5})
+    assert r.converged
+
+
+def test_fresh_checkpoint_dir_starts_cold(rng, tmp_path):
+    A = _spectrum_matrix(rng)
+    plain = svd(A, 4, **KW)
+    ck = svd(A, 4, checkpoint_dir=str(tmp_path / "new"), **KW)
+    np.testing.assert_array_equal(np.asarray(ck.S), np.asarray(plain.S))
+    assert ck.passes_over_A == plain.passes_over_A
+
+
+def test_already_converged_checkpoint_finalizes_without_stepping(
+        rng, tmp_path):
+    """Re-running a finished solve from its checkpoint dir does ZERO new
+    block iterations — only the extraction pass."""
+    A = _spectrum_matrix(rng)
+    ck = str(tmp_path / "ck")
+    first = svd(A, 4, checkpoint_dir=ck, **KW)
+    m2 = CountingHostMatrix(A, 3)
+    again = svd(m2, 4, checkpoint_dir=ck, **KW)
+    np.testing.assert_array_equal(np.asarray(again.S), np.asarray(first.S))
+    assert m2.passes == 1                      # just the extract pass
+    assert again.passes_over_A == first.passes_over_A

@@ -1,0 +1,266 @@
+"""The explicit init/step/finalize state machine behind svd().
+
+Pins the tentpole contracts of the resumable solver core:
+
+* composing the three phases by hand reproduces the one-shot ``svd()``
+  BITWISE (the state machine is the driver, not a reimplementation);
+* the ``on_iteration`` trace hook observes the exact per-iteration
+  state trajectory (gap/pass/byte accounting);
+* every ``lagged_sync`` backend overshoots convergence by AT MOST one
+  iteration past the first tolerance crossing (the bounded-overshoot
+  promise the lag-one sync makes), while the synchronous numpy backend
+  stops exactly at the crossing;
+* ``svd_update`` warm restarts converge in O(1) block iterations on
+  perturbed matrices where a cold start needs >= 10.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SolverState, SVDConfig, svd, svd_update,
+                        CountingHostMatrix, DenseOperator,
+                        HostBlockedOperator, SparseStreamOperator,
+                        SyntheticSparseMatrix)
+from repro.core.oom import HostBlockedMatrix
+from repro.core.svd import finalize, init_state, step
+
+
+def _full_spectrum(rng, m, n, top=5.0, bottom=1.0):
+    """Full-rank matrix with a gently decaying spectrum: slow enough
+    that cold block iteration needs tens of iterations at eps=1e-6."""
+    L = rng.standard_normal((m, n)).astype(np.float32)
+    U, _, Vt = np.linalg.svd(L, full_matrices=False)
+    return (U * np.linspace(top, bottom, n).astype(np.float32)) @ Vt
+
+
+# ---------------------------------------------------------------------------
+# Bitwise: the state machine IS the driver
+# ---------------------------------------------------------------------------
+
+def test_manual_phases_match_svd_bitwise_dense(rng):
+    A = _full_spectrum(rng, 60, 20)
+    cfg = SVDConfig(method="block", warmup_q=1, oversample=4)
+    ref = svd(jnp.asarray(A), 4, config=cfg)
+
+    op = DenseOperator(jnp.asarray(A))
+    state = init_state(op, 4, cfg)
+    while not state.converged and state.it < cfg.max_iters:
+        state = step(op, state, cfg)
+    res = finalize(op, state, cfg)
+
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(ref.S))
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    np.testing.assert_array_equal(np.asarray(res.V), np.asarray(ref.V))
+    assert res.passes_over_A == ref.passes_over_A
+    assert res.iters[0] == ref.iters[0]
+    assert res.converged == ref.converged
+    assert res.bytes_moved == ref.bytes_moved
+
+
+def test_manual_phases_match_svd_bitwise_hostblocked(rng):
+    A = _full_spectrum(rng, 48, 16)
+    cfg = SVDConfig(method="block", n_blocks=3, eps=1e-5)
+    ref = svd(A, 3, config=cfg)
+
+    op = HostBlockedOperator(HostBlockedMatrix(A, cfg.n_blocks))
+    state = init_state(op, 3, cfg)
+    while not state.converged and state.it < cfg.max_iters:
+        state = step(op, state, cfg)
+    res = finalize(op, state, cfg)
+
+    np.testing.assert_array_equal(np.asarray(res.S), np.asarray(ref.S))
+    np.testing.assert_array_equal(np.asarray(res.U), np.asarray(ref.U))
+    assert res.passes_over_A == ref.passes_over_A
+    assert res.bytes_moved == ref.bytes_moved
+
+
+def test_state_is_replaced_not_mutated(rng):
+    A = _full_spectrum(rng, 40, 12)
+    cfg = SVDConfig(method="block", max_iters=3, force_iters=True)
+    op = DenseOperator(jnp.asarray(A))
+    s0 = init_state(op, 3, cfg)
+    s1 = step(op, s0, cfg)
+    assert s0.it == 0 and s1.it == 1          # frozen value semantics
+    assert s1 is not s0
+    with pytest.raises(Exception):
+        s0.it = 5
+
+
+# ---------------------------------------------------------------------------
+# The on_iteration trace hook
+# ---------------------------------------------------------------------------
+
+def test_trace_hook_observes_every_iteration(rng):
+    A = _full_spectrum(rng, 50, 16)
+    seen = []
+    res = svd(jnp.asarray(A), 3, method="block", warmup_q=1,
+              on_iteration=seen.append)
+    assert len(seen) == res.iters[0]
+    assert [s.it for s in seen] == list(range(1, res.iters[0] + 1))
+    assert all(isinstance(s, SolverState) for s in seen)
+    # pass accounting is cumulative and strictly increasing
+    passes = [s.passes for s in seen]
+    assert passes == sorted(passes) and passes[0] > 0
+    assert all(s.bytes_moved["device"] > 0 for s in seen)
+    # the final iteration's state carries the converged verdict
+    assert seen[-1].converged == res.converged
+
+
+def test_trace_hook_gap_trajectory_decreases(rng):
+    A = _full_spectrum(rng, 50, 16)
+    seen = []
+    svd(A, 3, method="block", warmup_q=1, n_blocks=2,
+        on_iteration=seen.append)
+    gaps = [float(s.gap) for s in seen]
+    assert gaps[-1] < gaps[0] * 1e-2          # it really converged
+
+
+# ---------------------------------------------------------------------------
+# Lagged-sync overshoot contract (satellite: nothing pinned this before)
+# ---------------------------------------------------------------------------
+
+def _overshoot(make_input, k, **kw):
+    """Iterations past the first tolerance crossing of the gap
+    trajectory, observed through the trace hook."""
+    seen = []
+    res = svd(make_input, k, method="block", on_iteration=seen.append,
+              **kw)
+    assert res.converged
+    cfg = SVDConfig(method="block", **kw)
+    gaps = [float(s.gap) for s in seen]
+    tol = cfg.eps * seen[0].Q.shape[1]
+    first_cross = next(i + 1 for i, g in enumerate(gaps) if g <= tol)
+    return res.iters[0] - first_cross
+
+
+@pytest.mark.parametrize("backend", ["dense", "hostblocked", "memmap"])
+def test_lagged_backends_overshoot_at_most_one_pass(backend, rng,
+                                                    tmp_path):
+    A = _full_spectrum(rng, 60, 16)
+    if backend == "dense":
+        inp, kw = jnp.asarray(A), {}
+    elif backend == "hostblocked":
+        inp, kw = A, {"n_blocks": 3}
+    else:
+        from repro.core import stage_to_disk, MemmapMatrix
+        path = stage_to_disk(A, str(tmp_path / "a.npy"))
+        inp, kw = MemmapMatrix(path, 3), {"n_blocks": 3}
+    over = _overshoot(inp, 3, warmup_q=1, **kw)
+    assert 0 <= over <= 1                     # the bounded promise
+    assert over == 1                          # and lag-one means exactly 1
+
+
+def test_synchronous_sparse_backend_has_zero_overshoot():
+    sp = SyntheticSparseMatrix(600, 48, 8, seed=3)
+    assert not SparseStreamOperator(sp).lagged_sync
+    over = _overshoot(sp, 4, warmup_q=1, eps=1e-5)
+    assert over == 0                          # exact per-iteration test
+
+
+# ---------------------------------------------------------------------------
+# svd_update: warm restarts in O(1) iterations
+# ---------------------------------------------------------------------------
+
+def _cold_and_warm(rng, backend="dense"):
+    A = _full_spectrum(rng, 80, 24)
+    delta = 1e-4 * rng.standard_normal(A.shape).astype(np.float32)
+    if backend == "dense":
+        first, second = jnp.asarray(A), jnp.asarray(A + delta)
+    else:
+        first, second = A, A + delta
+    prev = svd(first, 5, method="block", warmup_q=1)
+    cold = svd(second, 5, method="block", warmup_q=1)
+    warm = svd_update(prev, second)
+    return prev, cold, warm, second
+
+
+def test_update_converges_in_O1_where_cold_needs_tens(rng):
+    prev, cold, warm, second = _cold_and_warm(rng)
+    assert cold.iters[0] >= 10
+    assert warm.iters[0] <= 3
+    assert warm.converged
+    np.testing.assert_allclose(np.asarray(warm.S), np.asarray(cold.S),
+                               rtol=1e-4)
+
+
+def test_update_hostblocked_backend(rng):
+    prev, cold, warm, _ = _cold_and_warm(rng, backend="hostblocked")
+    assert warm.backend == "hostblocked"
+    assert warm.iters[0] <= 3 < cold.iters[0]
+    np.testing.assert_allclose(np.asarray(warm.S), np.asarray(cold.S),
+                               rtol=1e-4)
+
+
+def test_update_row_append(rng):
+    """New rows arrive (recommender/streaming-PCA shape): the previous V
+    zero-pads into the new width and still converges in O(1)."""
+    A = _full_spectrum(rng, 70, 20)
+    prev = svd(jnp.asarray(A), 4, method="block", warmup_q=1)
+    B = np.vstack([A, 0.05 * rng.standard_normal((6, 20)).astype(np.float32)])
+    warm = svd_update(prev, jnp.asarray(B))
+    assert warm.iters[0] <= 3
+    s_ref = np.linalg.svd(B, compute_uv=False)[:4]
+    np.testing.assert_allclose(np.asarray(warm.S), s_ref, rtol=1e-3)
+
+
+def test_update_wide_matrix_orientation(rng):
+    """Wide inputs transpose in/swap out; the warm seed must follow the
+    same orientation (previous U seeds the driver's right side)."""
+    A = _full_spectrum(rng, 64, 20).T           # (20, 64): wide
+    prev = svd(jnp.asarray(A), 4, method="block", warmup_q=1)
+    warm = svd_update(prev, jnp.asarray(A + 1e-4))
+    assert warm.iters[0] <= 3
+    assert warm.U.shape == (20, 4) and warm.V.shape == (64, 4)
+    np.testing.assert_allclose(np.asarray(warm.S), np.asarray(prev.S),
+                               rtol=1e-3)
+
+
+def test_update_rank_increase_appends_random_directions(rng):
+    A = _full_spectrum(rng, 80, 24)
+    prev = svd(jnp.asarray(A), 4, method="block", warmup_q=1)
+    up = svd_update(prev, jnp.asarray(A), 7)
+    s_ref = np.linalg.svd(A, compute_uv=False)[:7]
+    assert np.asarray(up.S).shape == (7,)
+    np.testing.assert_allclose(np.asarray(up.S), s_ref, rtol=1e-3)
+
+
+def test_update_accepts_solver_state(rng):
+    """A live (or checkpointed) SolverState seeds the restart: the new
+    solve picks up roughly where the interrupted trajectory left off."""
+    A = _full_spectrum(rng, 60, 18)
+    cfg = SVDConfig(method="block", warmup_q=1)
+    cold = svd(jnp.asarray(A), 4, config=cfg)
+    op = DenseOperator(jnp.asarray(A))
+    state = init_state(op, 4, cfg)
+    for _ in range(6):                          # partially converged
+        state = step(op, state, cfg)
+    warm = svd_update(state, jnp.asarray(A))
+    assert warm.iters[0] < cold.iters[0]        # the 6 steps weren't lost
+    s_ref = np.linalg.svd(A, compute_uv=False)[:4]
+    np.testing.assert_allclose(np.asarray(warm.S), s_ref, rtol=1e-3)
+
+
+def test_update_default_rank_is_previous_rank(rng):
+    A = _full_spectrum(rng, 50, 14)
+    prev = svd(jnp.asarray(A), 3, method="block", warmup_q=1)
+    assert np.asarray(svd_update(prev, jnp.asarray(A)).S).shape == (3,)
+
+
+def test_update_rejects_bad_prev_and_bad_method(rng):
+    A = _full_spectrum(rng, 40, 12)
+    prev = svd(jnp.asarray(A), 3, method="block")
+    with pytest.raises(TypeError, match="SVDResult or"):
+        svd_update(np.eye(3), jnp.asarray(A))
+    with pytest.raises(ValueError, match="method must be 'block'"):
+        svd_update(prev, jnp.asarray(A), method="gram")
+
+
+def test_update_pass_accounting_stays_ground_truth(rng):
+    """The warm path's reported passes are still the instrumented
+    operator's own counter."""
+    A = _full_spectrum(rng, 60, 18)
+    prev = svd(A, 4, method="block", warmup_q=1, n_blocks=3)
+    counting = CountingHostMatrix(A + 1e-4, 3)
+    warm = svd_update(prev, counting)
+    assert warm.passes_over_A == counting.passes
+    assert warm.iters[0] <= 3
