@@ -1,0 +1,127 @@
+"""Static contract checks over the solver's own lowered step functions.
+
+``run_all()`` (CLI: ``python -m repro.analysis``) runs three passes
+WITHOUT executing a solve and aggregates an ``AnalysisReport``:
+
+* jaxpr pass   — collective/precision/purity contracts on traces of the
+  driver's jitted step builders (``analysis/jaxpr_check.py``);
+* memory pass  — peak-live-bytes vs device budget, plus static A-traffic
+  cross-validated against the operators' ``bytes_per_pass`` accounting
+  (``analysis/memory.py``);
+* lint pass    — stdlib-ast conventions over ``src/repro/core``
+  (``analysis/lint.py``).
+
+Intentional exceptions live in ``analysis/allowlist.py`` with written
+reasons; everything else fails the run (CI treats a nonzero exit as a
+failing check).
+"""
+from __future__ import annotations
+
+from repro.analysis.report import AnalysisReport, CheckRecord, Violation
+
+__all__ = ["run_all", "AnalysisReport", "CheckRecord", "Violation",
+           "DEFAULT_BUDGET_BYTES"]
+
+#: default per-device budget for the peak-live estimate (16 GiB HBM)
+DEFAULT_BUDGET_BYTES = 16 << 30
+
+ALL_PASSES = ("jaxpr", "memory", "lint")
+
+
+def _run_trace_passes(report: AnalysisReport, passes, budget_bytes):
+    from repro.analysis.allowlist import apply_allowlist
+    from repro.analysis.jaxpr_check import check_step, trace_jaxpr
+    from repro.analysis.memory import check_memory
+    from repro.analysis.targets import build_targets
+
+    targets, groups, twins = build_targets()
+    by_group = {g.name: g for g in groups}
+    measured = {g.name: 0 for g in groups}
+    coll_by_tag = {}
+
+    for t in targets:
+        jx = trace_jaxpr(t.fn, *t.args)
+        if "jaxpr" in passes and t.contract is not None:
+            v, d = check_step(jx, t.contract, t.tag)
+            if t.note:
+                d["note"] = t.note
+            report.add(apply_allowlist(v),
+                       CheckRecord("jaxpr", t.tag, "ok", d))
+            coll_by_tag[t.tag] = sum(c["bytes"] for c in d["collectives"])
+        if "memory" in passes:
+            grp = by_group.get(t.group) if t.group else None
+            v, d = check_memory(
+                jx, t.tag, budget_bytes=budget_bytes,
+                a_nbytes=t.a_nbytes,
+                mode=grp.mode if grp is not None else "dots")
+            if grp is not None and "a_read_bytes" in d:
+                measured[grp.name] += d["a_read_bytes"]
+            report.add(apply_allowlist(v),
+                       CheckRecord("memory", t.tag, "ok", d))
+
+    if "jaxpr" in passes:
+        for a, b in twins:
+            if a not in coll_by_tag or b not in coll_by_tag:
+                continue
+            ca, cb = coll_by_tag[a], coll_by_tag[b]
+            v = []
+            if ca != cb:
+                v.append(Violation(
+                    "jaxpr", "bf16-collective-drift", f"{a}~{b}",
+                    f"collective bytes differ between precision twins: "
+                    f"{ca:,} vs {cb:,} — the bf16 sweep must halve HBM "
+                    f"traffic, never touch the (fp32 accumulator) psum "
+                    f"payload"))
+            report.add(apply_allowlist(v), CheckRecord(
+                "jaxpr", f"twin:{a}~{b}", "ok",
+                {"collective_bytes": [ca, cb]}))
+
+    if "memory" in passes:
+        for g in groups:
+            got = (g.measured_bytes if g.mode == "meta"
+                   else measured[g.name] * g.replicas)
+            v = []
+            if got != g.expected_bytes:
+                v.append(Violation(
+                    "memory", "accounting-mismatch", g.name,
+                    f"static A-traffic estimate {got:,} bytes != solver "
+                    f"accounting {g.expected_bytes:,} ({g.source}) — the "
+                    f"lowered step and the bytes_per_pass counters have "
+                    f"diverged"))
+            report.add(apply_allowlist(v), CheckRecord(
+                "memory", f"accounting:{g.name}", "ok",
+                {"mode": g.mode, "expected_bytes": int(g.expected_bytes),
+                 "measured_bytes": int(got), "replicas": g.replicas,
+                 "source": g.source}))
+
+
+def _run_lint_pass(report: AnalysisReport, lint_root):
+    from repro.analysis.allowlist import apply_allowlist
+    from repro.analysis.lint import lint_core
+
+    violations = apply_allowlist(lint_core(lint_root))
+    report.add(violations, CheckRecord(
+        "lint", lint_root or "core/", "ok",
+        {"n_violations": sum(not v.allowlisted for v in violations),
+         "n_allowlisted": sum(v.allowlisted for v in violations)}))
+    return violations
+
+
+def run_all(*, passes=ALL_PASSES, budget_bytes: int = DEFAULT_BUDGET_BYTES,
+            lint_root: str | None = None) -> AnalysisReport:
+    """Run the requested passes and return the aggregated report."""
+    from repro.analysis.allowlist import stale_entries
+
+    report = AnalysisReport()
+    all_violations = []
+    if "jaxpr" in passes or "memory" in passes:
+        _run_trace_passes(report, passes, budget_bytes)
+    if "lint" in passes:
+        _run_lint_pass(report, lint_root)
+    if set(ALL_PASSES) <= set(passes) and lint_root is None:
+        # Only a FULL default run can judge staleness: a partial run
+        # legitimately misses the other passes' allowlist hits.
+        all_violations = list(report.violations)
+        report.add(stale_entries(all_violations),
+                   CheckRecord("lint", "allowlist", "ok", {}))
+    return report

@@ -1,0 +1,54 @@
+"""``python -m repro.analysis`` — the static contract checker CLI.
+
+Runs the jaxpr contract, memory/traffic, and repo-lint passes over the
+solver's own step functions (no solve is executed), prints the human
+summary, optionally writes the machine-readable JSON report, and exits
+nonzero on any non-allowlisted violation (the CI contract).
+"""
+# Before ANY jax import: the sharded targets want a multi-device mesh.
+# Appended — never clobbered — so user/CI-provided XLA_FLAGS survive
+# (xla_flags imports no jax).  Tests import repro.analysis directly and
+# run single-device; the contracts hold either way.
+from repro.launch.xla_flags import HOST_DEVICES_8, ensure_xla_flag
+
+ensure_xla_flag(HOST_DEVICES_8)
+
+import argparse   # noqa: E402
+import sys        # noqa: E402
+
+
+def main(argv=None) -> int:
+    from repro.analysis import ALL_PASSES, DEFAULT_BUDGET_BYTES, run_all
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checks (collectives, precision, "
+                    "syncs, memory) over the solver's step functions")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=ALL_PASSES, default=None,
+                    help="run only this pass (repeatable; default: all)")
+    ap.add_argument("--budget-bytes", type=int,
+                    default=DEFAULT_BUDGET_BYTES,
+                    help="per-device peak-live budget "
+                         "(default: 16 GiB)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here "
+                         "('-' for stdout)")
+    args = ap.parse_args(argv)
+
+    passes = tuple(args.passes) if args.passes else ALL_PASSES
+    report = run_all(passes=passes, budget_bytes=args.budget_bytes)
+
+    if args.json == "-":
+        print(report.to_json())
+    else:
+        print(report.summary())
+        if args.json:
+            with open(args.json, "w") as f:
+                f.write(report.to_json() + "\n")
+            print(f"report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

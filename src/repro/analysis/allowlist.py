@@ -1,0 +1,90 @@
+"""Intentional exceptions to the contract checks — each with its why.
+
+The analyzer's rules are strict by design; the few places the solver
+*deliberately* steps outside them are enumerated HERE, with a written
+justification, instead of weakening the pass that caught them.  Keys
+are ``"<target>::<rule>"`` where ``target`` is the violation's target
+(``core/<file>.py::<qualname>`` for lint, the trace tag for the jaxpr/
+memory passes).  An allowlisted violation still appears in the report
+(marked, with its reason) but does not fail the run — so removing the
+underlying exception later surfaces as a stale-allowlist entry, not as
+silence.
+"""
+from __future__ import annotations
+
+from repro.analysis.report import Violation
+
+__all__ = ["ALLOWLIST", "apply_allowlist", "stale_entries"]
+
+ALLOWLIST: dict[str, str] = {
+    # -- ANA003: in-trace fold_in(PRNGKey(0), seed) spots -------------------
+    # Inside shard_map the seed arrives as a TRACED uint32 word;
+    # seed_to_key() is a host-side helper and cannot run on tracers, so
+    # the convention there is fold_in(PRNGKey(0), seed_word) — the
+    # PRNGKey(0) is a constant base, not a competing seed scheme.
+    "core/operator.py::sharded_sketch_fn.sketch::ANA003":
+        "traced seed word inside shard_map; fold_in(PRNGKey(0), seed) is "
+        "the in-trace arm of the seed convention",
+    # random_block must reproduce the exact key stream the traced sketch
+    # derives, so it mirrors the same fold_in(PRNGKey(0), ...) base.
+    "core/operator.py::ShardedOperator.random_block::ANA003":
+        "host-side mirror of sharded_sketch_fn's traced key stream; must "
+        "fold from the same PRNGKey(0) base to match bit-for-bit",
+    "core/dist_svd.py::_dist_deflation.run::ANA003":
+        "traced seed word inside the jitted deflation run; "
+        "fold_in(PRNGKey(0), seed) is the in-trace arm of the convention",
+
+    # -- ANA005: the legacy deflation engine jits its whole run -------------
+    "core/dist_svd.py::_dist_deflation::ANA005":
+        "the deflation engine jits the WHOLE run once per solve (not a "
+        "per-iteration rebuild); acceptable for the legacy paper-faithful "
+        "path, which is not the hot production driver",
+
+    # -- ANA001: the synchronous numpy deflation engine ---------------------
+    "core/sparse.py::_sparse_deflation::ANA001":
+        "the sparse deflation engine is synchronous numpy end to end — "
+        "there is no device pipeline to stall, and the per-iteration "
+        "convergence check is the algorithm's termination test",
+
+    # -- ANA001: host-side serialization paths ------------------------------
+    # Checkpoint serialization: the loop converts the per-tier byte
+    # COUNTERS (host ints) to numpy scalars for np.savez — nothing
+    # traced is synced, and to_tree only runs at checkpoint boundaries,
+    # never inside the iteration loop.
+    "core/config.py::SolverState.to_tree::ANA001":
+        "checkpoint serialization of host-side counters; runs at "
+        "checkpoint boundaries, not per solver iteration",
+    # Disk staging: the whole point of the strip loop is to move A to
+    # disk through a bounded host buffer — the np.asarray IS the work,
+    # and staging happens once, before any solve starts.
+    "core/diskio.py::stage_to_disk::ANA001":
+        "one-time blockwise staging of A to disk; the host copy is the "
+        "operation itself, performed before the solve, not inside it",
+}
+
+
+def apply_allowlist(violations: list) -> list:
+    """Mark allowlisted violations in place; returns the same list."""
+    for v in violations:
+        reason = ALLOWLIST.get(f"{v.target}::{v.rule}")
+        if reason is not None:
+            v.allowlisted = True
+            v.reason = reason
+    return violations
+
+
+def stale_entries(violations: list) -> list:
+    """Allowlist keys that matched nothing this run.
+
+    A stale entry means the exception it documented no longer exists —
+    surfaced as its own violation so the allowlist shrinks with the
+    code instead of fossilizing.
+    """
+    seen = {f"{v.target}::{v.rule}" for v in violations}
+    out = []
+    for key in sorted(set(ALLOWLIST) - seen):
+        out.append(Violation(
+            "lint", "stale-allowlist", key,
+            "allowlist entry matched no violation this run; delete it "
+            "(the exception it documented is gone)"))
+    return out

@@ -1,0 +1,252 @@
+"""Repo lint pass: the solver conventions stdlib ``ast`` can enforce.
+
+Five rules over ``src/repro/core`` (the driver + backends — the code
+the jaxpr pass can't see because it runs on the host side):
+
+* **ANA001 host-sync-in-loop** — ``float()``/``bool()``/``.item()``/
+  ``np.asarray()``/``jax.device_get()`` inside a loop body blocks the
+  async-dispatch pipeline once per iteration.  The ONE sanctioned
+  device->host sync is ``core/operator.py::host_sync_scalar`` (the
+  driver's lagged convergence read); everything else is either hoisted
+  out of the loop or an explicit allowlisted exception.
+* **ANA002 frozen-state-mutation** — ``SolverState`` is an immutable
+  value (checkpointing and bitwise resume depend on it); assigning to
+  its attributes, or ``object.__setattr__`` on anything but ``self``
+  (the frozen-dataclass ``__post_init__`` idiom), is forbidden.
+* **ANA003 raw-prngkey** — seeds cross process/checkpoint boundaries as
+  integers via ``core/config.py::key_to_seed``/``seed_to_key``; a raw
+  ``jax.random.PRNGKey(...)`` anywhere else forks the seed convention
+  (in-trace ``fold_in(PRNGKey(0), seed)`` spots are allowlisted — a
+  traced seed word cannot round-trip through the host helper).
+* **ANA004 accounting-bypass** — ``passes``/``bytes_moved`` on the
+  state flow ONLY through the delta-stamped helper
+  (``core/svd.py::_stamp``); a ``.replace(passes=...)`` anywhere else
+  double-counts or drops a delta the moment two code paths disagree.
+* **ANA005 uncached-jit** — ``jax.jit(...)`` called inside a function
+  body creates a fresh callable per call, so jax's compile cache (keyed
+  on callable identity) misses every time: a silent retrace+recompile
+  in a hot loop.  Jitted steps live at module level or behind
+  ``functools.lru_cache`` builder functions.
+
+Pure stdlib (``ast``), no jax import, so it composes with ruff as the
+project-specific half of linting.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.report import Violation
+
+__all__ = ["lint_file", "lint_tree", "lint_core", "DEFAULT_LINT_ROOT"]
+
+DEFAULT_LINT_ROOT = os.path.join(os.path.dirname(__file__), "..", "core")
+
+#: functions whose bodies are the sanctioned host-sync implementations
+SANCTIONED_SYNC_FUNCS = {"host_sync_scalar"}
+
+#: files whose streamed backends are synchronous numpy end to end —
+#: np.asarray there is array plumbing, not a device sync (float()/
+#: .item() in loops still flagged: even numpy loops shouldn't hide
+#: per-iteration scalarization without an allowlist entry)
+NUMPY_HOST_FILES = {"sparse.py"}
+
+_SYNC_CALLS = {"float", "bool"}
+_SYNC_ATTR_CALLS = {("np", "asarray"), ("numpy", "asarray"),
+                    ("jax", "device_get")}
+
+
+def _attr_chain(node):
+    """('jax','random','PRNGKey') for jax.random.PRNGKey, else ()."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def _decorator_names(node):
+    names = []
+    for d in node.decorator_list:
+        t = d.func if isinstance(d, ast.Call) else d
+        names.append(".".join(_attr_chain(t)) or "")
+        # functools.partial(jax.jit, ...) style decorators
+        if isinstance(d, ast.Call):
+            for a in d.args:
+                names.append(".".join(_attr_chain(a)) or "")
+    return names
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.fname = os.path.basename(relpath)
+        self.violations: list[Violation] = []
+        self.scope: list[str] = []          # qualname parts
+        self.loop_depth: list[int] = [0]    # one counter per function frame
+        self.cached_fn: list[bool] = [False]
+        self.state_params: list[set] = [set()]
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _qualname(self) -> str:
+        return ".".join(self.scope) or "<module>"
+
+    def _target(self) -> str:
+        return f"{self.relpath}::{self._qualname()}"
+
+    def _report(self, rule: str, node, msg: str):
+        self.violations.append(Violation(
+            "lint", rule, self._target(), f"line {node.lineno}: {msg}"))
+
+    def _in_function(self) -> bool:
+        return len(self.loop_depth) > 1
+
+    def _in_loop(self) -> bool:
+        return self.loop_depth[-1] > 0
+
+    # -- scope/loop tracking ------------------------------------------------
+
+    def visit_ClassDef(self, node):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def _visit_func(self, node):
+        decos = _decorator_names(node)
+        cached = any("lru_cache" in d or d.endswith(".cache")
+                     or d == "cache" for d in decos)
+        stateish = {a.arg for a in
+                    list(node.args.args) + list(node.args.kwonlyargs)
+                    if a.annotation is not None
+                    and "SolverState" in ast.unparse(a.annotation)}
+        stateish |= {a.arg for a in node.args.args if a.arg == "state"}
+        self.scope.append(node.name)
+        self.loop_depth.append(0)
+        self.cached_fn.append(cached or self.cached_fn[-1])
+        self.state_params.append(stateish)
+        self.generic_visit(node)
+        self.state_params.pop()
+        self.cached_fn.pop()
+        self.loop_depth.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _visit_loop(self, node):
+        self.loop_depth[-1] += 1
+        self.generic_visit(node)
+        self.loop_depth[-1] -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+    visit_AsyncFor = _visit_loop
+
+    # -- rules --------------------------------------------------------------
+
+    def visit_Call(self, node):
+        chain = _attr_chain(node.func)
+        dotted = ".".join(chain)
+
+        # ANA001: host syncs inside loop bodies
+        if self._in_loop():
+            sanctioned = bool(set(self.scope) & SANCTIONED_SYNC_FUNCS)
+            hit = None
+            if len(chain) == 1 and chain[0] in _SYNC_CALLS:
+                hit = chain[0] + "()"
+            elif len(chain) == 2 and chain in _SYNC_ATTR_CALLS:
+                if not (self.fname in NUMPY_HOST_FILES
+                        and chain[1] == "asarray"):
+                    hit = dotted + "()"
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                hit = ".item()"
+            if hit and not sanctioned:
+                self._report(
+                    "ANA001", node,
+                    f"{hit} inside a loop body is a per-iteration host "
+                    f"sync that stalls async dispatch; route it through "
+                    f"core/operator.py::host_sync_scalar (lagged) or "
+                    f"hoist it out of the loop")
+
+        # ANA002: object.__setattr__ on non-self
+        if chain[-2:] == ("object", "__setattr__") or \
+                dotted == "object.__setattr__":
+            if node.args and not (isinstance(node.args[0], ast.Name)
+                                  and node.args[0].id == "self"):
+                self._report(
+                    "ANA002", node,
+                    "object.__setattr__ on a non-self target mutates a "
+                    "frozen value in place; build a new state with "
+                    ".replace(...) instead")
+
+        # ANA003: raw PRNGKey outside the seed convention module
+        if chain[-1:] == ("PRNGKey",) and self.fname != "config.py":
+            self._report(
+                "ANA003", node,
+                "raw jax.random.PRNGKey() outside core/config.py forks "
+                "the seed convention; derive keys via seed_to_key()/"
+                "key_to_seed()")
+
+        # ANA004: accounting fields set outside the _stamp helper
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "replace" \
+                and "_stamp" not in self.scope:
+            kws = {k.arg for k in node.keywords}
+            bad = kws & {"passes", "bytes_moved"}
+            if bad:
+                self._report(
+                    "ANA004", node,
+                    f".replace({', '.join(sorted(bad))}=...) bypasses the "
+                    f"delta-stamped accounting; go through "
+                    f"core/svd.py::_stamp")
+
+        # ANA005: jax.jit() constructed inside a function body
+        if dotted in ("jax.jit", "jit") and self._in_function() \
+                and not self.cached_fn[-1]:
+            self._report(
+                "ANA005", node,
+                "jax.jit(...) inside a function body builds a new "
+                "callable per call — the compile cache (keyed on "
+                "identity) misses every time; hoist to module level or "
+                "an @functools.lru_cache builder")
+
+        self.generic_visit(node)
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+                    and t.value.id in self.state_params[-1]:
+                self._report(
+                    "ANA002", node,
+                    f"assignment to {t.value.id}.{t.attr} mutates the "
+                    f"frozen SolverState; use state.replace(...)")
+        self.generic_visit(node)
+
+
+def lint_tree(tree: ast.AST, relpath: str) -> list:
+    linter = _Linter(relpath)
+    linter.visit(tree)
+    return linter.violations
+
+
+def lint_file(path: str, relpath: str | None = None) -> list:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    rel = relpath or os.path.basename(path)
+    return lint_tree(ast.parse(src, filename=path), rel)
+
+
+def lint_core(root: str | None = None) -> list:
+    """Lint every module of ``src/repro/core`` (the default root)."""
+    root = os.path.abspath(root or DEFAULT_LINT_ROOT)
+    out = []
+    for name in sorted(os.listdir(root)):
+        if not name.endswith(".py"):
+            continue
+        out.extend(lint_file(os.path.join(root, name),
+                             relpath=f"core/{name}"))
+    return out

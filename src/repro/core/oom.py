@@ -59,11 +59,14 @@ the tests).  The count is dtype-independent: bf16 staging halves
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import SVDConfig, SVDResult
+from repro.core.config import SVDConfig, SVDResult, seed_to_key
+from repro.core.operator import host_sync_scalar
 from repro.core.precision import resolve_sweep_dtype
 from repro.core.partition import BatchPlan, make_batch_plan, symmetric_tasks
 
@@ -78,6 +81,75 @@ def _f32dot(a: jax.Array, b: jax.Array) -> jax.Array:
     if a.dtype == jnp.float32 and b.dtype == jnp.float32:
         return a @ b
     return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Per-block jitted step functions (module-level, lru-cached)
+#
+# jax's compile cache is keyed on callable IDENTITY: a `jax.jit(lambda ...)`
+# built inside a method is a fresh callable — and a fresh retrace+recompile
+# — on every call.  These builders return the ONE cached jitted step per
+# signature, shared by every HostBlockedMatrix instance; they are also the
+# functions `repro.analysis` traces, so the statically checked per-block
+# schedule is exactly what the streamed loops dispatch.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def hostblock_gram_step_fn():
+    """``acc + blk^T blk`` — one block of the streamed Gram."""
+    return jax.jit(lambda acc, blk: acc + _f32dot(blk.T, blk))
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_matvec_fn():
+    """``blk @ v`` — one block of the streamed mat-vec."""
+    return jax.jit(lambda blk, v: _f32dot(blk, v))
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_matmat_fn():
+    """``blk @ Q`` — one block of the streamed extraction pass."""
+    return jax.jit(lambda blk, Q: _f32dot(blk, Q))
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_rmatmat_step_fn():
+    """``acc + blk^T y_b`` — one block of the streamed ``A^T Y``."""
+    return jax.jit(lambda acc, blk, yb: acc + _f32dot(blk.T, yb))
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_chain_step_fn(stage_dtype: str):
+    """``acc + blk^T (blk Q)`` — one block of the FUSED gram chain, the
+    hot loop's step: the block is read once for both sweep halves.
+    Under bf16 staging both sweep operands are narrow (``Q`` and the
+    intermediate cast down) with fp32 accumulation; fp32 staging keeps
+    the plain dot (bit-stable with the pre-policy code)."""
+    sd = jnp.dtype(stage_dtype)
+    if sd == jnp.float32:
+        def _step(acc, blk, Q):
+            return acc + blk.T @ (blk @ Q)
+    else:
+        def _step(acc, blk, Q):
+            y = _f32dot(blk, Q.astype(sd))
+            return acc + _f32dot(blk.T, y.astype(sd))
+    return jax.jit(_step)
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_sketch_step_fn():
+    """``acc + blk^T om_b`` — one block of the streamed range sketch
+    (Omega row blocks generated on the fly, never resident)."""
+    return jax.jit(lambda acc, blk, om: acc + _f32dot(blk.T, om))
+
+
+@functools.lru_cache(maxsize=None)
+def hostblock_deflate_step_fn():
+    """``acc + blk^T (xv_b - u_b svtv)`` — one block of the fused Alg-4
+    reverse sweep (``svtv`` passed as an argument, not closed over, so
+    the compiled step is reused across deflation iterations)."""
+    return jax.jit(
+        lambda acc, blk, xvb, ub, svtv: acc + blk.T @ (xvb - ub @ svtv))
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +302,7 @@ class HostBlockedMatrix:
     def gram(self) -> jax.Array:
         """Streamed ``A^T A`` with bounded device memory."""
         acc = jnp.zeros((self.n, self.n), jnp.float32)
-        step = jax.jit(lambda acc, blk: acc + _f32dot(blk.T, blk))
+        step = hostblock_gram_step_fn()    # cached: no per-call retrace
         # Prefetch pipeline: issue H2D for the next block while current
         # computes (async dispatch) — the q_s=2 double-buffer case.
         nxt = self.block(0)
@@ -246,7 +318,7 @@ class HostBlockedMatrix:
         ``gram``/``gram_chain`` so the next block's H2D overlaps the
         current block's compute."""
         outs = []
-        mv = jax.jit(lambda blk, v: _f32dot(blk, v))
+        mv = hostblock_matvec_fn()         # cached: no per-call retrace
         nxt = self.block(0)
         for b in range(self.n_blocks):
             cur = nxt
@@ -262,7 +334,7 @@ class HostBlockedMatrix:
         stall the exact pipeline the iterate just kept busy.  ``Q`` stays
         fp32 (extraction accuracy); only ``A``'s staging is narrow."""
         outs = []
-        mm = jax.jit(lambda blk, Q: _f32dot(blk, Q))
+        mm = hostblock_matmat_fn()         # cached: no per-call retrace
         nxt = self.block(0)
         for b in range(self.n_blocks):
             cur = nxt
@@ -276,7 +348,7 @@ class HostBlockedMatrix:
         double-buffered like the other streamed ops.  ``Y`` stays fp32;
         only ``A``'s staging is narrow."""
         acc = jnp.zeros((self.n, Y.shape[1]), jnp.float32)
-        step = jax.jit(lambda acc, blk, yb: acc + _f32dot(blk.T, yb))
+        step = hostblock_rmatmat_step_fn() # cached: no per-call retrace
         nxt = self.block(0)
         for b in range(self.n_blocks):
             lo, hi = self.plan.bounds(b)
@@ -293,14 +365,7 @@ class HostBlockedMatrix:
         staging both sweep operands are narrow (``Q`` and the
         intermediate are cast down) with fp32 accumulation."""
         acc = jnp.zeros((self.n, Q.shape[1]), jnp.float32)
-        sd = self.stage_dtype
-        if sd == jnp.float32:
-            step = jax.jit(lambda acc, blk, Q: acc + blk.T @ (blk @ Q))
-        else:
-            def _step(acc, blk, Q):
-                y = _f32dot(blk, Q.astype(sd))
-                return acc + _f32dot(blk.T, y.astype(sd))
-            step = jax.jit(_step)
+        step = hostblock_chain_step_fn(self.stage_dtype.name)
         nxt = self.block(0)
         for b in range(self.n_blocks):
             cur = nxt
@@ -314,9 +379,9 @@ class HostBlockedMatrix:
                                  SVtv: jax.Array) -> jax.Array:
         """``sum_b A_b^T (Xv_b - U_b @ SVtv)`` streamed (fused Alg-4 sweep)."""
         acc = jnp.zeros((self.n,), jnp.float32)
-        step = jax.jit(lambda acc, blk, xvb, ub: acc + blk.T @ (xvb - ub @ SVtv))
+        step = hostblock_deflate_step_fn() # cached: no per-call retrace
         for b in range(self.n_blocks):
-            acc = step(acc, self.block(b), Xv_blocks[b], U_blocks[b])
+            acc = step(acc, self.block(b), Xv_blocks[b], U_blocks[b], SVtv)
         return acc
 
 
@@ -372,7 +437,7 @@ def _oom_deflation(op: HostBlockedMatrix, k: int, *, eps, max_iters,
     Expects the tall orientation.  Returns ``(U, S, V, iters, passes)``.
     """
     m, n = op.m, op.n
-    key = jax.random.PRNGKey(seed)
+    key = seed_to_key(seed)
 
     bounds = [op.plan.bounds(b) for b in range(op.n_blocks)]
 
@@ -411,7 +476,7 @@ def _oom_deflation(op: HostBlockedMatrix, k: int, *, eps, max_iters,
             if force_iters:
                 continue
             if it % CONVERGENCE_CHECK_EVERY == 0 or it == max_iters:
-                if bool(done):
+                if host_sync_scalar(done):   # sanctioned periodic sync
                     break
         iters_out[l] = it
         passes += 2 * it + 1       # 2 streams per power step + u recovery

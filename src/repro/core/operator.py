@@ -88,9 +88,27 @@ __all__ = [
     "HostBlockedOperator",
     "MemmapOperator",
     "SparseStreamOperator",
+    "dense_block_step_fn",
     "sharded_block_step_fn",
+    "host_sync_scalar",
     "warm_start_width",
 ]
+
+
+def host_sync_scalar(x):
+    """The ONE sanctioned device->host sync in the driver loops.
+
+    Blocks until ``x`` (a 0-d device array, numpy scalar, or plain
+    python number) is available and returns it as a python scalar.
+    Every per-iteration host read in ``core/`` goes through here so the
+    static analyzer (``repro.analysis``, lint rule ANA001) can tell the
+    driver's deliberate lagged convergence sync apart from an accidental
+    ``float()`` that would stall the async-dispatch / H2D-prefetch
+    pipeline once per iteration.
+    """
+    if isinstance(x, (bool, int, float)):
+        return x
+    return x.item()
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +146,20 @@ def _dense_sketch(X, key, *, l, sweep_dtype):
 @jax.jit
 def _dense_extract(X, Q):
     return rayleigh_ritz_from_W(X @ Q, Q)
+
+
+@functools.lru_cache(maxsize=None)
+def dense_block_step_fn(sweep_dtype):
+    """ONE driver block step on the dense backend: the sweep-dtype gram
+    chain composed with the shared QR orthonormalization — the same two
+    jitted primitives ``core/svd.py::step`` dispatches per iteration
+    through ``DenseOperator``.  ``repro.analysis`` traces THIS function,
+    so the checked schedule can't drift from the solver."""
+
+    def block_step(X, Q):
+        return _orth(_dense_chain(X, Q, sweep_dtype=sweep_dtype))
+
+    return jax.jit(block_step)
 
 
 # ---------------------------------------------------------------------------
@@ -570,12 +602,12 @@ class HostBlockedOperator(LinearOperator):
 
     def range_sketch(self, l, seed):
         self._count(self.sketch_passes)
-        from repro.core.oom import _f32dot
+        from repro.core.oom import hostblock_sketch_step_fn
         host = self._host
         okey = jax.random.fold_in(seed_to_key(seed), 1)
         sd = host.stage_dtype
         acc = jnp.zeros((host.n, l), jnp.float32)
-        step = jax.jit(lambda acc, blk, om: acc + _f32dot(blk.T, om))
+        step = hostblock_sketch_step_fn()   # cached: no per-call retrace
         nxt = host.block(0)
         for b in range(host.n_blocks):     # one pass; Omega never resident
             cur = nxt

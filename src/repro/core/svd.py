@@ -67,7 +67,8 @@ from repro.core.config import (SolverState, SVDConfig,  # noqa: F401
                                SVDResult, key_to_seed, seed_to_key)
 from repro.core.operator import (DenseOperator, HostBlockedOperator,
                                  LinearOperator, ShardedOperator,
-                                 SparseStreamOperator, warm_start_width)
+                                 SparseStreamOperator, host_sync_scalar,
+                                 warm_start_width)
 from repro.core.precision import resolve_sweep_dtype
 
 __all__ = ["svd", "svd_update", "init_state", "step", "finalize",
@@ -181,15 +182,15 @@ def step(op: LinearOperator, state: SolverState,
     converged, prev_gap = False, state.prev_gap
     if not cfg.force_iters:            # paper's benchmark mode: no test
         if op.lagged_sync:
-            # Sync the PREVIOUS gap: by the time float() runs, this
-            # iteration's stream is already dispatched, so the host wait
+            # Sync the PREVIOUS gap: by the time the host read runs,
+            # this iteration's stream is already dispatched, so the wait
             # can never stall the prefetch pipeline; overshoot is
             # bounded at one pass over A.
-            if prev_gap is not None and float(prev_gap) <= tol:
+            if prev_gap is not None and host_sync_scalar(prev_gap) <= tol:
                 converged = True       # this step WAS the overshoot
             else:
                 prev_gap = gap
-        elif float(gap) <= tol:
+        elif host_sync_scalar(gap) <= tol:
             converged = True
     return _stamp(state, op, p0, b0, Q=Qn, it=state.it + 1, gap=gap,
                   prev_gap=prev_gap, converged=converged)
@@ -203,7 +204,7 @@ def finalize(op: LinearOperator, state: SolverState,
     transposed inputs and may override the bookkeeping fields."""
     converged = state.converged
     if not converged and not cfg.force_iters and state.gap is not None:
-        converged = bool(float(state.gap) <= _tol(state, cfg))
+        converged = bool(host_sync_scalar(state.gap) <= _tol(state, cfg))
     p0, b0 = int(op.passes), dict(op.bytes_moved)
     k = state.k
     U, S, V = op.extract(state.Q)                      # one more pass

@@ -1,0 +1,19 @@
+"""``python -m repro.launch.svd_check`` — launch-side contract checker.
+
+Thin wrapper over ``python -m repro.analysis`` so the static contract
+checks sit next to the other launch entry points (``svd_dryrun``,
+``dryrun``): same passes, same exit semantics (nonzero on any
+non-allowlisted violation), same ``--json`` report.  Use this when
+driving checks from launch tooling; use ``python -m repro.analysis``
+directly everywhere else.
+"""
+from repro.launch.xla_flags import HOST_DEVICES_8, ensure_xla_flag
+
+ensure_xla_flag(HOST_DEVICES_8)  # append, never clobber, before jax
+
+import sys  # noqa: E402
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,8 +22,15 @@ Lowers ONE deflated power step (the paper's inner loop) for the paper's
 
 Records FLOPs / bytes / per-collective bytes for §Perf — the
 paper-faithful vs beyond-paper comparison on the technique itself.
+
+Every variant also carries its COLLECTIVE CONTRACT (the exact psum
+schedule the variant is allowed to lower to, see
+``analysis/jaxpr_check.py``); ``main()`` checks each trace against it
+and exits nonzero with an expected-vs-actual schedule diff when one
+drifts — the dry-run is a failing check, not just a printout.
 """
 import os
+import sys
 
 from repro.launch.xla_flags import HOST_DEVICES_512, ensure_xla_flag
 
@@ -36,6 +43,8 @@ import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.analysis.jaxpr_check import (StepContract,  # noqa: E402
+                                        check_step, trace_jaxpr)
 from repro.compat import shard_map as _shard_map  # noqa: E402
 from repro.core.dist_svd import (_deflated_chain_step,  # noqa: E402
                                  _all_gather_inv)
@@ -51,9 +60,43 @@ N = 32_768
 K = 32
 
 
-def lower_variant(mesh, kind: str, faithful: bool):
+def variant_contract(tag: str, mesh) -> StepContract:
+    """The exact psum schedule each lowered variant is allowed to have.
+
+    Per-shard payload shapes, as they appear inside the shard_map body.
+    This table IS the documented collective story of the §Perf
+    comparison — a variant whose trace drifts from it fails the
+    dry-run.
+    """
+    nd = mesh.shape["data"]
+    L = K + 8
+    return {
+        # Alg 4 paper lines 6/8/16: three all-reduces per deflated step
+        "chain/faithful": StepContract(
+            psum_payloads=(((N,),), ((K,),), ((N,),))),
+        # ours: one fused all-reduce of the concatenated payloads
+        "chain/opt": StepContract(psum_payloads=(((N + K,),),)),
+        # Alg 3: B = psum(X^T X) replicated on every chip
+        "gram/faithful": StepContract(psum_payloads=(((N, N),),)),
+        # ours: B row-sharded via reduce-scatter + gather-invariant
+        "gram/opt": StepContract(
+            psum_payloads=(((N // nd, N),),),
+            allowed_collectives=frozenset(
+                {"psum_scatter", "reduce_scatter", "all_gather"})),
+        # block subspace iteration: ONE (n, k) psum advances all K ranks
+        "block/opt": StepContract(psum_payloads=(((N, K),),)),
+        # bf16 twin: SAME schedule (fp32 payload), narrow sweeps required
+        "block/bf16": StepContract(psum_payloads=(((N, K),),),
+                                   requires_bf16=True),
+        # range-finder warm start: sketch psum + one fused refinement
+        "block/warm": StepContract(psum_payloads=(((N, L),), ((N, L),))),
+    }[tag]
+
+
+def variant_fn_args(mesh, kind: str, faithful: bool):
+    """The power-step callable + abstract args for one variant — shared
+    by the lowering (``lower_variant``) and the contract trace."""
     axes = ("data", "model")  # flatten the whole pod over both axes
-    nshards = mesh.shape["data"] * mesh.shape["model"]
     row_spec = P(axes, None)
 
     @functools.partial(
@@ -85,7 +128,12 @@ def lower_variant(mesh, kind: str, faithful: bool):
         sds((N, K), P(None, None)),
         sds((N,), P(None)),
     )
-    return jax.jit(power_step).lower(*args)
+    return power_step, args
+
+
+def lower_variant(mesh, kind: str, faithful: bool):
+    fn, args = variant_fn_args(mesh, kind, faithful)
+    return jax.jit(fn).lower(*args)
 
 
 def lower_block_variant(mesh, sweep_dtype="float32"):
@@ -100,6 +148,11 @@ def lower_block_variant(mesh, sweep_dtype="float32"):
     copy with fp32 MXU accumulation; the psum payload and the QR stay
     fp32 — per-chip HBM bytes of the dominant term halve, collective
     bytes are identical."""
+    fn, args = block_variant_fn_args(mesh, sweep_dtype)
+    return fn.lower(*args)
+
+
+def block_variant_fn_args(mesh, sweep_dtype="float32"):
     axes = ("data", "model")
     row_spec = P(axes, None)
     block_step = sharded_block_step_fn(mesh, axes, sweep_dtype)
@@ -107,7 +160,7 @@ def lower_block_variant(mesh, sweep_dtype="float32"):
     sds = lambda shape, spec: jax.ShapeDtypeStruct(
         shape, jnp.float32, sharding=NamedSharding(mesh, spec))
     args = (sds((M_GLOBAL, N), row_spec), sds((N, K), P(None, None)))
-    return block_step.lower(*args)
+    return block_step, args
 
 
 def lower_block_warm_variant(mesh):
@@ -118,6 +171,11 @@ def lower_block_warm_variant(mesh):
     refinement + QR.  A one-off cost of the same shape as ~2.5 block
     steps that buys ~10x fewer iterations on separated spectra (see
     benchmarks/warmstart.py)."""
+    fn, args = block_warm_variant_fn_args(mesh)
+    return jax.jit(fn).lower(*args)
+
+
+def block_warm_variant_fn_args(mesh):
     axes = ("data", "model")
     row_spec = P(axes, None)
     L = K + 8                                          # oversampled width
@@ -132,18 +190,39 @@ def lower_block_warm_variant(mesh):
         shape, dtype, sharding=NamedSharding(mesh, spec))
     args = (sds((M_GLOBAL, N), jnp.float32, row_spec),
             sds((1,), jnp.uint32, P(None)))
-    return jax.jit(warm_step).lower(*args)
+    return warm_step, args
+
+
+def check_variant_contract(tag, fn, args, mesh) -> list:
+    """Trace one variant and diff its psum schedule against the table.
+
+    Returns the violations (empty when the schedule matches); prints the
+    expected-vs-actual diff when it doesn't.
+    """
+    contract = variant_contract(tag, mesh)
+    violations, details = check_step(
+        trace_jaxpr(fn, *args), contract, tag, pass_name="dryrun")
+    if violations:
+        print(f"[FAIL] {tag}: collective contract violated", flush=True)
+        print(f"       expected psums: "
+              f"{[list(map(list, s)) for s in contract.psum_payloads]}")
+        print(f"       traced   psums: {details['psum_payloads']}")
+        for v in violations:
+            print(f"       - {v.rule}: {v.message}")
+    return violations
 
 
 def main():
     mesh = make_production_mesh()
     out = {}
+    bad = []
     for kind in ("chain", "gram"):
         for faithful in (True, False):
             tag = f"{kind}/{'faithful' if faithful else 'opt'}"
             print(f"[run ] svd power step {tag}", flush=True)
-            lw = lower_variant(mesh, kind, faithful)
-            out[tag] = analyze(lw)
+            fn, args = variant_fn_args(mesh, kind, faithful)
+            bad += check_variant_contract(tag, fn, args, mesh)
+            out[tag] = analyze(jax.jit(fn).lower(*args))
             r = out[tag]
             print(f"[ ok ] {tag}: flops={r.get('flops', 0):.3e} "
                   f"coll={r.get('collective_bytes_total', 0)/1e6:.1f}MB",
@@ -154,14 +233,15 @@ def main():
     # bytes on the dominant A term), and the range-finder warm start
     # (one-off; replaces ~10x the steps) — all lowered from the SAME
     # jitted ShardedOperator step functions the svd() driver runs
-    for tag, lower_fn in (
-            ("block/opt", lower_block_variant),
+    for tag, fa in (
+            ("block/opt", lambda: block_variant_fn_args(mesh)),
             ("block/bf16",
-             lambda mesh: lower_block_variant(mesh, "bfloat16")),
-            ("block/warm", lower_block_warm_variant)):
+             lambda: block_variant_fn_args(mesh, "bfloat16")),
+            ("block/warm", lambda: block_warm_variant_fn_args(mesh))):
         print(f"[run ] svd power step {tag}", flush=True)
-        lw = lower_fn(mesh)
-        out[tag] = analyze(lw)
+        fn, args = fa()
+        bad += check_variant_contract(tag, fn, args, mesh)
+        out[tag] = analyze(jax.jit(fn).lower(*args))
         r = out[tag]
         print(f"[ ok ] {tag}: flops={r.get('flops', 0):.3e} "
               f"coll={r.get('collective_bytes_total', 0)/1e6:.1f}MB",
@@ -172,6 +252,11 @@ def main():
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print("written", path)
+    if bad:
+        print(f"svd_dryrun: {len(bad)} collective-contract violation(s) — "
+              f"the lowered schedule drifted from the documented one",
+              flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

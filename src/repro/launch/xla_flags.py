@@ -9,6 +9,10 @@ import os
 
 HOST_DEVICES_512 = "--xla_force_host_platform_device_count=512"
 
+#: the analyzer's mesh: enough placeholder devices to make the sharded
+#: contracts meaningful, small enough that tracing stays instant
+HOST_DEVICES_8 = "--xla_force_host_platform_device_count=8"
+
 
 def with_xla_flag(existing: str | None, flag: str) -> str:
     """Append ``flag`` to an XLA_FLAGS value, preserving what's there."""
