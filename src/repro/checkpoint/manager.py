@@ -21,11 +21,38 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
 
 import jax
 import numpy as np
 
 from repro import compat
+from repro.core.errors import CheckpointCorruptError
+from repro.core.faults import fault_hook
+
+#: error classes that mean "this step's files are unreadable" (truncated
+#: zip, torn JSON, missing member) as opposed to a caller bug
+_CORRUPT_ERRORS = (OSError, ValueError, KeyError, EOFError,
+                   json.JSONDecodeError, zipfile.BadZipFile)
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:            # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree):
@@ -68,11 +95,20 @@ class CheckpointManager:
         ``extra`` — optional JSON-serializable dict stored in the step's
         ``meta.json`` (fingerprints, provenance); read it back with
         ``read_meta(step)["extra"]``.
+
+        Crash-safety contract: the tmp dir is fully written AND fsynced
+        (files + directory entry) before the single ``os.replace`` that
+        publishes it, and an existing step is moved aside — never
+        rmtree'd — before the replace, so at every instant the directory
+        holds at least one intact copy of the newest successfully-saved
+        step.  A kill at ANY point leaves either the old step, the new
+        step, or a ``.tmp``/``.old`` leftover that resume ignores.
         """
         keys, vals, _ = _flatten(state)
         tmp = self._step_dir(step) + ".tmp"
         final = self._step_dir(step)
-        os.makedirs(tmp, exist_ok=True)
+        shutil.rmtree(tmp, ignore_errors=True)   # clobber a stale tmp
+        os.makedirs(tmp)
         arrays = {}
         for k, v in zip(keys, vals):
             a = np.asarray(jax.device_get(v))
@@ -88,16 +124,59 @@ class CheckpointManager:
             meta["extra"] = extra
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_file(os.path.join(tmp, "arrays.npz"))
+        _fsync_dir(tmp)
+        # chaos site: the injection point for "crashed after writing the
+        # tmp but before publishing" — the window atomicity must cover
+        fault_hook("checkpoint_write", None)
+        old = None
         if os.path.exists(final):
-            shutil.rmtree(final)
+            # move the previous copy aside instead of deleting it: the
+            # old rmtree-then-replace left a window with NO intact copy
+            old = final + ".old"
+            shutil.rmtree(old, ignore_errors=True)
+            os.replace(final, old)
         os.replace(tmp, final)          # atomic publish
+        _fsync_dir(self.dir)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
         self._gc()
         return final
 
     def read_meta(self, step: int) -> dict:
-        """The step's ``meta.json`` (step number, leaf keys, ``extra``)."""
-        with open(os.path.join(self._step_dir(step), "meta.json")) as f:
-            return json.load(f)
+        """The step's ``meta.json`` (step number, leaf keys, ``extra``).
+
+        A missing/torn/unparseable file raises ``CheckpointCorruptError``
+        so resume can quarantine the step and fall back."""
+        path = os.path.join(self._step_dir(step), "meta.json")
+        try:
+            with open(path) as f:
+                meta = json.load(f)
+        except _CORRUPT_ERRORS as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable meta.json at {path!r} "
+                f"({type(e).__name__}: {e})") from e
+        if not isinstance(meta, dict) or "keys" not in meta:
+            raise CheckpointCorruptError(
+                f"step {step}: meta.json at {path!r} parsed but is not a "
+                f"checkpoint manifest (missing 'keys')")
+        return meta
+
+    def quarantine(self, step: int) -> str:
+        """Move a corrupt step OUT of the resume path — renamed to
+        ``step_XXXXXXXX.corrupt`` (suffix-numbered on collision) so the
+        evidence survives for forensics but ``all_steps`` never offers
+        it again.  Returns the quarantine path."""
+        src = self._step_dir(step)
+        dst = src + ".corrupt"
+        i = 1
+        while os.path.exists(dst):
+            dst = f"{src}.corrupt{i}"
+            i += 1
+        os.replace(src, dst)
+        return dst
 
     def restore(self, step: int, like, shardings=None):
         """Restore into the structure of ``like`` (a matching pytree).
@@ -106,12 +185,18 @@ class CheckpointManager:
         *target* mesh (elastic restore onto a different topology).
         """
         path = self._step_dir(step)
-        with np.load(os.path.join(path, "arrays.npz")) as data:
-            keys, vals, treedef = _flatten(like)
-            restored = []
-            for k, v in zip(keys, vals):
-                arr = data[k]
-                restored.append(arr)
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as data:
+                keys, vals, treedef = _flatten(like)
+                restored = []
+                for k, v in zip(keys, vals):
+                    arr = data[k]
+                    restored.append(arr)
+        except _CORRUPT_ERRORS as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable arrays.npz under {path!r} "
+                f"({type(e).__name__}: {e}) — truncated write or disk "
+                f"corruption") from e
         tree = jax.tree.unflatten(treedef, restored)
         if shardings is not None:
             tree = jax.tree.map(

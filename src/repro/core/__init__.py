@@ -73,6 +73,21 @@ from repro.core.sparse import (  # noqa: F401
     SyntheticSparseMatrix,
     sparse_tsvd,
 )
+from repro.core.errors import (  # noqa: F401
+    CheckpointCorruptError,
+    DeviceOOMFault,
+    FaultExhaustedError,
+    InputError,
+    NumericalHealthError,
+    SVDError,
+)
+from repro.core.faults import (  # noqa: F401
+    FaultPlan,
+    FaultSpec,
+    FaultTelemetry,
+    RetryPolicy,
+    inject_faults,
+)
 from repro.core.svd import (  # noqa: F401
     finalize,
     init_state,
@@ -130,6 +145,18 @@ __all__ = [
     "BatchPlan",
     "make_batch_plan",
     "symmetric_tasks",
+    # fault tolerance: typed errors + the chaos-injection harness
+    "SVDError",
+    "InputError",
+    "FaultExhaustedError",
+    "CheckpointCorruptError",
+    "NumericalHealthError",
+    "DeviceOOMFault",
+    "FaultPlan",
+    "FaultSpec",
+    "FaultTelemetry",
+    "RetryPolicy",
+    "inject_faults",
     # deprecated legacy entrypoints + result-type aliases
     "tsvd",
     "dist_tsvd",

@@ -38,6 +38,7 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
+from repro.core.errors import InputError
 from repro.core.precision import SWEEP_DTYPES, resolve_sweep_dtype
 
 METHODS = ("gram", "gramfree", "block")
@@ -105,6 +106,25 @@ class SVDConfig:
                      instead of instrumenting operators ad hoc).  Note
                      ``state.gap`` may be an unsynced device scalar;
                      ``float()`` it only if you accept the sync.
+    ``io_retries``   total attempts (1 = no retry) for each transient
+                     staging operation — the memmap disk read and the
+                     H2D block copy — under exponential backoff with
+                     deterministic jitter (``core/faults.py::retry_io``).
+                     Exhaustion raises ``FaultExhaustedError``; every
+                     retry/giveup is reported in ``SVDResult.faults``.
+    ``io_retry_backoff``  base backoff delay in seconds (doubles per
+                     attempt, capped at 2s; 0 = retry immediately —
+                     the chaos tests use 0 to stay fast).
+    ``health_retries``  block only: bounded rollback/re-orth attempts of
+                     the numeric health guard before the solve raises
+                     ``FaultExhaustedError``.  The counter resets every
+                     confirmed-healthy step, so it bounds *consecutive*
+                     failures, not lifetime ones.
+    ``demote_on_oom``  block only: on device RESOURCE_EXHAUSTED, demote
+                     the operator one memory tier (dense/sharded ->
+                     host-blocked -> memmap) carrying the warm iterate,
+                     instead of failing the solve.  ``False`` re-raises
+                     the OOM.
     """
 
     method: str = "block"
@@ -122,48 +142,64 @@ class SVDConfig:
     checkpoint_dir: Any = None
     checkpoint_every: int = 1
     on_iteration: Any = None
+    io_retries: int = 3
+    io_retry_backoff: float = 0.05
+    health_retries: int = 3
+    demote_on_oom: bool = True
 
     def __post_init__(self):
+        # InputError subclasses ValueError, so pre-typed `except
+        # ValueError` handlers keep catching config mistakes
         if self.method not in METHODS:
-            raise ValueError(f"unknown method {self.method!r}; expected "
+            raise InputError(f"unknown method {self.method!r}; expected "
                              f"one of {METHODS}")
         if self.eps <= 0:
-            raise ValueError(f"eps must be > 0, got {self.eps}")
+            raise InputError(f"eps must be > 0, got {self.eps}")
         if self.max_iters < 1:
-            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+            raise InputError(f"max_iters must be >= 1, got {self.max_iters}")
         if self.warmup_q < 0:
-            raise ValueError(f"warmup_q must be >= 0, got {self.warmup_q}")
+            raise InputError(f"warmup_q must be >= 0, got {self.warmup_q}")
         if self.oversample < 0:
-            raise ValueError(
+            raise InputError(
                 f"oversample must be >= 0, got {self.oversample}")
         if self.n_blocks < 1:
-            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+            raise InputError(f"n_blocks must be >= 1, got {self.n_blocks}")
         if self.block_rows < 1:
-            raise ValueError(
+            raise InputError(
                 f"block_rows must be >= 1, got {self.block_rows}")
         if self.host_budget_bytes < 0:
-            raise ValueError(f"host_budget_bytes must be >= 0 (0 = "
+            raise InputError(f"host_budget_bytes must be >= 0 (0 = "
                              f"unbounded), got {self.host_budget_bytes}")
         if self.checkpoint_every < 1:
-            raise ValueError(f"checkpoint_every must be >= 1, "
+            raise InputError(f"checkpoint_every must be >= 1, "
                              f"got {self.checkpoint_every}")
+        if self.io_retries < 1:
+            raise InputError(f"io_retries must be >= 1 (1 = no retry), "
+                             f"got {self.io_retries}")
+        if self.io_retry_backoff < 0:
+            raise InputError(f"io_retry_backoff must be >= 0 seconds, "
+                             f"got {self.io_retry_backoff}")
+        if self.health_retries < 0:
+            raise InputError(f"health_retries must be >= 0 (0 = fail on "
+                             f"the first unhealthy step), "
+                             f"got {self.health_retries}")
         if self.checkpoint_dir is not None and self.method != "block":
-            raise ValueError("checkpoint_dir requires method='block' "
+            raise InputError("checkpoint_dir requires method='block' "
                              "(only the block driver is a resumable "
                              "state machine)")
         if self.on_iteration is not None and self.method != "block":
-            raise ValueError("on_iteration requires method='block' "
+            raise InputError("on_iteration requires method='block' "
                              "(the deflation engines have no per-"
                              "iteration SolverState to trace)")
         if self.warmup_q and self.method != "block":
-            raise ValueError("warmup_q > 0 requires method='block' "
+            raise InputError("warmup_q > 0 requires method='block' "
                              "(deflation has no block iterate to "
                              "warm-start)")
         # canonicalize the dtype spelling (accepts jnp/np dtypes too)
         sd_name = resolve_sweep_dtype(self.sweep_dtype).name
         object.__setattr__(self, "sweep_dtype", sd_name)
         if sd_name != SWEEP_DTYPES[0] and self.method != "block":
-            raise ValueError("sweep_dtype != 'float32' requires "
+            raise InputError("sweep_dtype != 'float32' requires "
                              "method='block' (only the block sweeps have "
                              "the mixed-precision policy; deflation stays "
                              "the fp32 oracle)")
@@ -179,10 +215,13 @@ class SVDConfig:
         Two configs with the same fingerprint drive the block iterate
         through the SAME sequence of states from a given ``Q0``, so a
         checkpoint written under one may be resumed under the other.
-        Budget/tolerance knobs (``eps``, ``max_iters``, ``force_iters``)
-        and the checkpoint/trace plumbing are deliberately excluded —
-        resuming a capped run with a larger budget or a different
-        tolerance is the point of resumability.  ``n_blocks``/
+        Budget/tolerance knobs (``eps``, ``max_iters``, ``force_iters``),
+        the checkpoint/trace plumbing, and the recovery knobs
+        (``io_retries``/``io_retry_backoff``/``health_retries``/
+        ``demote_on_oom`` — retries replay identical work, never new
+        work) are deliberately excluded — resuming a capped run with a
+        larger budget or a different tolerance is the point of
+        resumability.  ``n_blocks``/
         ``block_rows`` ARE included: they reorder the streamed FP
         accumulation, so a mismatch would break bitwise reproducibility.
         """
@@ -321,6 +360,11 @@ class SVDResult(NamedTuple):
     #                          solve: {"disk": ..., "host": ...,
     #                          "device": ...} (tiers the backend touched;
     #                          ground truth from the operator's counters)
+    faults: Any = None       # fault/recovery telemetry for the solve:
+    #                          {"counters": {"<site>.<action>": n},
+    #                          "events": [...]} from core/faults.py::
+    #                          FaultTelemetry (block driver only; None
+    #                          on the deflation engines)
 
 
 def key_to_seed(key) -> int:

@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import InputError
+from repro.core.faults import fault_hook, retry_io
 from repro.core.oom import HostBlockedMatrix
 from repro.core.partition import make_batch_plan
 from repro.core.precision import resolve_sweep_dtype
@@ -83,8 +85,23 @@ def open_matrix_memmap(path) -> np.ndarray:
     numpy round-trips the ml_dtypes bfloat16 descr as a raw 2-byte void
     dtype under ``mmap_mode``; such files are viewed back as bf16 (the
     bytes are identical), so bf16-staged files load transparently.
+
+    A missing, truncated, or non-``.npy`` file raises ``InputError``
+    (not a raw numpy traceback) with the path in the message.
     """
-    arr = np.load(os.fspath(path), mmap_mode="r")
+    p = os.fspath(path)
+    try:
+        arr = np.load(p, mmap_mode="r")
+    except (OSError, ValueError, EOFError) as e:
+        raise InputError(
+            f"{p!r} is not a readable .npy matrix ({type(e).__name__}: "
+            f"{e}); re-stage it with repro.core.stage_to_disk() or point "
+            f"svd() at an intact file") from e
+    if not hasattr(arr, "ndim") or arr.ndim != 2:
+        raise InputError(
+            f"{p!r} does not hold a 2-D matrix (got "
+            f"ndim={getattr(arr, 'ndim', None)}); svd() needs an (m, n) "
+            f"array on disk")
     if arr.dtype == np.dtype("V2"):
         arr = arr.view(np.dtype(jnp.bfloat16))
     return arr
@@ -137,6 +154,10 @@ class MemmapMatrix(HostBlockedMatrix):
         self.h2d_bytes = 0
         self.fetches = 0
         self.peak_host_bytes = 0
+        # resilience plumbing, installed per-solve by the driver via
+        # LinearOperator.set_resilience (None = defaults, no telemetry)
+        self.telemetry = None
+        self.retry_policy = None
 
     @property
     def file_dtype(self) -> np.dtype:
@@ -174,7 +195,16 @@ class MemmapMatrix(HostBlockedMatrix):
             self._cache.move_to_end(b)
             return blk
         lo, hi = self.plan.bounds(b)
-        raw = np.asarray(self._mm[lo:hi])          # the disk read
+
+        def _read():
+            # the reliability-critical staging hop: a transient OSError
+            # here (EIO, NFS hiccup, injected fault) is retried under
+            # the driver's backoff policy, not surfaced to the solve
+            fault_hook("disk_read", self.telemetry)
+            return np.asarray(self._mm[lo:hi])     # the disk read
+
+        raw = retry_io(_read, site="disk_read", policy=self.retry_policy,
+                       telemetry=self.telemetry)
         self.disk_bytes += (hi - lo) * self.n * self.file_dtype.itemsize
         if raw.dtype == self.stage_dtype:
             blk = np.ascontiguousarray(raw)
@@ -195,6 +225,13 @@ class MemmapMatrix(HostBlockedMatrix):
 
     def block(self, b: int) -> jax.Array:
         blk = self.host_block(b)
+
+        def _put():
+            fault_hook("h2d", self.telemetry)
+            return jnp.asarray(blk)                # the H2D copy
+
+        dev = retry_io(_put, site="h2d", policy=self.retry_policy,
+                       telemetry=self.telemetry)
         self.fetches += 1
         self.h2d_bytes += blk.nbytes
-        return jnp.asarray(blk)
+        return dev

@@ -1,0 +1,111 @@
+"""Typed exception hierarchy for the SVD front door.
+
+Every error the solver raises on purpose derives from ``SVDError``, so
+callers can catch one type instead of fishing ``ValueError`` out of
+numpy tracebacks.  The subclasses ALSO derive from the builtin type the
+same condition used to raise (``InputError`` is a ``ValueError`` and a
+``TypeError``, ``FaultExhaustedError`` a ``RuntimeError``, ...), so
+every ``except ValueError`` written against the pre-typed API keeps
+working — the hierarchy is a refinement, not a break.
+
+The ``*Fault`` leaf types at the bottom are the *injected* fault
+signals the chaos harness (``core/faults.py``) raises at its injection
+sites; they subclass the builtin the real failure would raise
+(``OSError`` for a disk read, a ``RuntimeError`` carrying
+``RESOURCE_EXHAUSTED`` for a device OOM), so the recovery paths cannot
+tell a drill from the real thing — which is the point of the drill.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "SVDError",
+    "InputError",
+    "FaultExhaustedError",
+    "CheckpointCorruptError",
+    "NumericalHealthError",
+    "TransientIOFault",
+    "H2DCopyFault",
+    "DeviceOOMFault",
+    "KilledFault",
+    "is_oom_error",
+]
+
+
+class SVDError(Exception):
+    """Base class for every error the solver raises deliberately."""
+
+
+class InputError(SVDError, TypeError, ValueError):
+    """The caller handed ``svd()``/``SVDConfig`` something unusable:
+    an undispatchable type, a corrupt dataset file, an empty matrix,
+    ``k`` out of range, or an invalid config knob.
+
+    Subclasses BOTH ``TypeError`` and ``ValueError`` as a back-compat
+    bridge: dispatch failures used to be ``TypeError``, validation
+    failures ``ValueError``, and code catching either keeps working.
+    """
+
+
+class FaultExhaustedError(SVDError, RuntimeError):
+    """A recovery path ran out of attempts: transient I/O kept failing
+    past the retry budget, the numeric health guard rolled back
+    ``health_retries`` times without a clean step, or an OOM hit the
+    bottom of the tier-demotion ladder.  ``__cause__`` carries the last
+    underlying failure."""
+
+
+class CheckpointCorruptError(SVDError, RuntimeError):
+    """A checkpoint step directory is unreadable (truncated npz, bad
+    json, missing keys, non-finite iterate).  Auto-resume quarantines
+    the step and falls back to an older one rather than surfacing this;
+    it only escapes when a caller reads a specific step directly."""
+
+
+class NumericalHealthError(SVDError, ArithmeticError):
+    """The health guard found NaN/Inf or orthogonality loss in the
+    iterate.  Internal control-flow signal: the driver catches it and
+    rolls back; after ``health_retries`` failures it re-raises as
+    ``FaultExhaustedError``.  ``kind`` is ``"nonfinite"`` or
+    ``"orth"``."""
+
+    def __init__(self, msg: str, *, kind: str = "nonfinite"):
+        super().__init__(msg)
+        self.kind = kind
+
+
+# ---------------------------------------------------------------------------
+# Injected-fault signals (raised by core/faults.py at its injection
+# sites; each subclasses what the real failure would raise)
+# ---------------------------------------------------------------------------
+
+class TransientIOFault(SVDError, OSError):
+    """Injected stand-in for a transient disk-read error (EIO and
+    friends) at the memmap staging hop."""
+
+
+class H2DCopyFault(TransientIOFault):
+    """Injected stand-in for a failed host->device block copy."""
+
+
+class DeviceOOMFault(SVDError, RuntimeError):
+    """Injected stand-in for the device allocator's RESOURCE_EXHAUSTED.
+    The message carries the literal token so ``is_oom_error`` classifies
+    it exactly like the real XLA error."""
+
+    def __init__(self, msg: str = ""):
+        super().__init__(f"RESOURCE_EXHAUSTED: {msg or 'injected device OOM'}")
+
+
+class KilledFault(SVDError, RuntimeError):
+    """Injected process kill in ``mode='raise'`` (the in-suite stand-in
+    for ``os._exit``; the two-process smoke uses the real exit)."""
+
+
+def is_oom_error(e: BaseException) -> bool:
+    """True iff ``e`` is a device out-of-memory condition — the injected
+    ``DeviceOOMFault`` or a real XLA allocator error.  OOM is the tier-
+    demotion ladder's job, never the I/O retry loop's: retrying an
+    allocation that cannot fit only burns the backoff budget."""
+    if isinstance(e, DeviceOOMFault):
+        return True
+    return "RESOURCE_EXHAUSTED" in str(e)

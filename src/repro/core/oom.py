@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import SVDConfig, SVDResult, seed_to_key
+from repro.core.faults import fault_hook, retry_io
 from repro.core.operator import host_sync_scalar
 from repro.core.precision import resolve_sweep_dtype
 from repro.core.partition import BatchPlan, make_batch_plan, symmetric_tasks
@@ -282,6 +283,10 @@ class HostBlockedMatrix:
                 dtype=self.stage_dtype)
             for lo, hi in (self.plan.bounds(b) for b in range(self.plan.n_batches))
         ]
+        # resilience plumbing, installed per-solve by the driver via
+        # LinearOperator.set_resilience (None = defaults, no telemetry)
+        self.telemetry = None
+        self.retry_policy = None
 
     @property
     def n_blocks(self) -> int:
@@ -297,7 +302,14 @@ class HostBlockedMatrix:
         return self._blocks[b]
 
     def block(self, b: int) -> jax.Array:
-        return jnp.asarray(self.host_block(b))
+        blk = self.host_block(b)
+
+        def _put():
+            fault_hook("h2d", self.telemetry)
+            return jnp.asarray(blk)                # the H2D copy
+
+        return retry_io(_put, site="h2d", policy=self.retry_policy,
+                        telemetry=self.telemetry)
 
     def gram(self) -> jax.Array:
         """Streamed ``A^T A`` with bounded device memory."""

@@ -69,6 +69,7 @@ via ``repro.core.svd(op, k, ...)``.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -189,6 +190,8 @@ class LinearOperator:
 
     def __init__(self):
         self._passes = 0
+        self._telemetry = None
+        self._retry_policy = None
 
     def _count(self, n):
         self._passes += n
@@ -295,6 +298,26 @@ class LinearOperator:
         return (f"{self.backend}:{int(m)}x{int(n)}:"
                 f"{np.dtype(self.dtype).name}:{sd}")
 
+    # -- resilience (core/faults.py) ----------------------------------------
+
+    def set_resilience(self, telemetry=None, retry_policy=None):
+        """Install the per-solve fault telemetry + retry policy.  The
+        driver calls this once per solve; adapters wrapping staged
+        matrices forward both onto the matrix, whose staging hops run
+        the actual ``retry_io`` loops."""
+        self._telemetry = telemetry
+        self._retry_policy = retry_policy
+
+    def demote(self, cfg):
+        """The next-lower memory tier for this problem, as a fresh
+        operator carrying the SAME matrix — or None when there is no
+        lower tier.  Called by the driver when a step hits device OOM
+        (``cfg.demote_on_oom``); the driver re-enters the demoted
+        operator with the warm iterate, so the work done so far is
+        kept.  The ladder: dense/sharded -> host-blocked -> memmap ->
+        (bottom)."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # DenseOperator — in-memory jax array (serial backend)
@@ -351,6 +374,16 @@ class DenseOperator(LinearOperator):
     def extract(self, Q):
         self._count(1)
         return _dense_extract(self._X, Q)
+
+    def demote(self, cfg):
+        # device OOM: pull A back to host and stream it block-by-block
+        # (same math, same sweep dtype, H2D per block instead of
+        # device-resident A)
+        from repro.core.oom import HostBlockedMatrix
+        A = np.asarray(jax.device_get(self._X), np.float32)
+        host = HostBlockedMatrix(A, cfg.n_blocks,
+                                 stage_dtype=self.sweep_dtype)
+        return HostBlockedOperator(host)
 
     @property
     def bytes_per_pass(self):
@@ -543,6 +576,15 @@ class ShardedOperator(LinearOperator):
         return jax.device_put(jnp.asarray(W, jnp.float32),
                               NamedSharding(self.mesh, P(None, None)))
 
+    def demote(self, cfg):
+        # mesh OOM: gather the shards back to host and stream H2D on
+        # one device — slower, but the solve finishes
+        from repro.core.oom import HostBlockedMatrix
+        A = np.asarray(jax.device_get(self._A), np.float32)
+        host = HostBlockedMatrix(A, cfg.n_blocks,
+                                 stage_dtype=self.sweep_dtype)
+        return HostBlockedOperator(host)
+
     @property
     def fingerprint(self):
         return super().fingerprint + f":shards={self.n_shards}"
@@ -628,6 +670,42 @@ class HostBlockedOperator(LinearOperator):
         if reset is not None:
             reset()
 
+    def set_resilience(self, telemetry=None, retry_policy=None):
+        # the staging hops live on the matrix, so the retry loop's
+        # telemetry/policy must land there
+        super().set_resilience(telemetry, retry_policy)
+        self._host.telemetry = telemetry
+        self._host.retry_policy = retry_policy
+
+    def demote(self, cfg):
+        """Host pressure: spill the staged blocks to a temp ``.npy``
+        and re-wrap as the disk tier.  The spill is blockwise (nothing
+        matrix-sized is ever resident) and the memmap keeps the same
+        block plan, so the streamed FP accumulation order — and with it
+        bitwise reproducibility — is unchanged.  The host cache budget
+        is ``cfg.host_budget_bytes`` when set, else half the file, so
+        the demoted tier actually holds less host memory."""
+        import tempfile
+        from repro.core.diskio import MemmapMatrix
+        host = self._host
+        fd, path = tempfile.mkstemp(suffix=".npy", prefix="repro_demoted_")
+        os.close(fd)
+        sd = np.dtype(host.stage_dtype)
+        out = np.lib.format.open_memmap(path, mode="w+", dtype=sd,
+                                        shape=(host.m, host.n))
+        for b in range(host.n_blocks):
+            lo, hi = host.plan.bounds(b)
+            out[lo:hi] = host.host_block(b)
+        out.flush()
+        del out
+        budget = cfg.host_budget_bytes or (host.m * host.n *
+                                           sd.itemsize) // 2
+        mm = MemmapMatrix(path, host.n_blocks, stage_dtype=sd.name,
+                          host_budget_bytes=budget)
+        op = MemmapOperator(mm)
+        op.spill_path = path    # caller owns the temp file's lifetime
+        return op
+
     @property
     def bytes_per_pass(self):
         return self._host.bytes_per_pass
@@ -657,6 +735,9 @@ class MemmapOperator(HostBlockedOperator):
     """
 
     backend = "memmap"
+
+    def demote(self, cfg):
+        return None          # disk is the bottom of the ladder
 
     @property
     def bytes_moved(self):

@@ -57,6 +57,7 @@ process); see the README migration table.
 """
 from __future__ import annotations
 
+import math
 import warnings
 
 import jax
@@ -65,6 +66,10 @@ import numpy as np
 
 from repro.core.config import (SolverState, SVDConfig,  # noqa: F401
                                SVDResult, key_to_seed, seed_to_key)
+from repro.core.errors import (FaultExhaustedError, InputError,
+                               NumericalHealthError, is_oom_error)
+from repro.core.faults import (FaultTelemetry, RetryPolicy, fault_hook,
+                               maybe_corrupt)
 from repro.core.operator import (DenseOperator, HostBlockedOperator,
                                  LinearOperator, ShardedOperator,
                                  SparseStreamOperator, host_sync_scalar,
@@ -132,7 +137,8 @@ def _tol(state: SolverState, cfg: SVDConfig) -> float:
 
 
 def init_state(op: LinearOperator, k: int, cfg: SVDConfig,
-               warm=None) -> SolverState:
+               warm=None, telemetry: FaultTelemetry | None = None
+               ) -> SolverState:
     """Phase 1: build the initial iterate as a first-class SolverState.
 
     ``Q0`` comes from (in priority order) the latest matching checkpoint
@@ -146,7 +152,7 @@ def init_state(op: LinearOperator, k: int, cfg: SVDConfig,
     cfp = cfg.solver_fingerprint()
     ofp = op.fingerprint
     if cfg.checkpoint_dir is not None:
-        state = _resume_state(op, k, cfg, cfp, ofp)
+        state = _resume_state(op, k, cfg, cfp, ofp, telemetry=telemetry)
         if state is not None:
             return state
     p0, b0 = int(op.passes), dict(op.bytes_moved)
@@ -166,6 +172,27 @@ def init_state(op: LinearOperator, k: int, cfg: SVDConfig,
                   op, p0, b0)
 
 
+def _check_health(g: float, width: int, where: str) -> None:
+    """The numeric health guard's test, applied to a SYNCED gap scalar.
+
+    The gap is the one host-visible per-iteration scalar, and it is a
+    perfect canary: any NaN/Inf anywhere in the iterate poisons the
+    ``l - ||Q^T Qn||_F^2`` reduction, and a finite value outside
+    ``[0, l]`` means the bases stopped being orthonormal.  Before this
+    guard a NaN gap silently never satisfied ``gap <= tol`` — the solve
+    would burn ``max_iters`` on garbage and return NaN factors.
+    """
+    if not math.isfinite(g):
+        raise NumericalHealthError(
+            f"non-finite subspace gap ({g}) {where}: the iterate "
+            f"contains NaN/Inf (overflowed sweep, corrupt input, or an "
+            f"injected fault)", kind="nonfinite")
+    if g < -1e-3 or g > width * 1.001 + 1e-3:
+        raise NumericalHealthError(
+            f"subspace gap {g} outside [0, {width}] {where}: "
+            f"orthogonality loss in the iterate", kind="orth")
+
+
 def step(op: LinearOperator, state: SolverState,
          cfg: SVDConfig) -> SolverState:
     """Phase 2: ONE subspace iteration — ``Q <- orth(A^T A Q)`` plus the
@@ -174,24 +201,45 @@ def step(op: LinearOperator, state: SolverState,
     sync is the lagged ``float()`` of the PREVIOUS gap, dispatched after
     this iteration's work, so jax backends keep the pipelined
     dispatch with overshoot bounded at one pass over A).
+
+    The synced gap doubles as the numeric health check: a NaN/Inf or
+    out-of-range value raises ``NumericalHealthError`` instead of
+    silently failing the ``<= tol`` test forever.  The driver loop
+    catches it and rolls back to the last confirmed-healthy state;
+    calling ``step`` directly surfaces the typed error.  Under
+    ``force_iters`` nothing is synced, so nothing is checked (the
+    benchmark mode trades the guard for zero host reads; ``finalize``
+    still reports ``converged=False``).
     """
     tol = _tol(state, cfg)
+    tel = getattr(op, "_telemetry", None)       # duck-typed operators
+    fault_hook("device_oom", tel)               # chaos: OOM on dispatch
     p0, b0 = int(op.passes), dict(op.bytes_moved)
-    Qn = op.orth(op.gram_chain(state.Q))
+    Z = maybe_corrupt("sweep", op.gram_chain(state.Q), tel)
+    Qn = op.orth(Z)
     gap = op.subspace_gap(state.Q, Qn)  # device scalar on jax backends
     converged, prev_gap = False, state.prev_gap
+    l = int(state.Q.shape[1])
     if not cfg.force_iters:            # paper's benchmark mode: no test
         if op.lagged_sync:
             # Sync the PREVIOUS gap: by the time the host read runs,
             # this iteration's stream is already dispatched, so the wait
             # can never stall the prefetch pipeline; overshoot is
             # bounded at one pass over A.
-            if prev_gap is not None and host_sync_scalar(prev_gap) <= tol:
-                converged = True       # this step WAS the overshoot
+            if prev_gap is not None:
+                g = host_sync_scalar(prev_gap)
+                _check_health(g, l, f"at iteration {state.it}")
+                if g <= tol:
+                    converged = True   # this step WAS the overshoot
+                else:
+                    prev_gap = gap
             else:
                 prev_gap = gap
-        elif host_sync_scalar(gap) <= tol:
-            converged = True
+        else:
+            g = host_sync_scalar(gap)
+            _check_health(g, l, f"at iteration {state.it + 1}")
+            if g <= tol:
+                converged = True
     return _stamp(state, op, p0, b0, Q=Qn, it=state.it + 1, gap=gap,
                   prev_gap=prev_gap, converged=converged)
 
@@ -242,34 +290,52 @@ def _align_seed(W, N: int, k: int, cfg: SVDConfig) -> np.ndarray:
     return out
 
 
-def _resume_state(op, k, cfg, cfp: str, ofp: str) -> SolverState | None:
-    """Load the latest checkpointed SolverState, or None if the dir has
-    none yet.  A fingerprint/rank mismatch is a hard error: silently
+def _resume_state(op, k, cfg, cfp: str, ofp: str,
+                  telemetry: FaultTelemetry | None = None
+                  ) -> SolverState | None:
+    """Load the newest READABLE checkpointed SolverState, or None if the
+    dir has none.  A corrupt/truncated step (a kill mid-write, a bad
+    disk) is quarantined — renamed to ``step_X.corrupt`` — and resume
+    falls back to the previous step instead of crashing; an INTACT step
+    whose fingerprints/rank mismatch stays a hard error: silently
     restarting (or worse, continuing someone else's trajectory) would
     corrupt the pass accounting and the bitwise-reproducibility story."""
     from repro.checkpoint import CheckpointManager
+    from repro.core.errors import CheckpointCorruptError
     mgr = CheckpointManager(cfg.checkpoint_dir)
-    step_no = mgr.latest_step()
-    if step_no is None:
-        return None
-    extra = mgr.read_meta(step_no).get("extra", {})
-    saved_cfp = extra.get("config_fp")
-    saved_ofp = extra.get("op_fp")
-    if saved_cfp != cfp or saved_ofp != ofp:
-        raise ValueError(
-            f"checkpoint_dir={cfg.checkpoint_dir!r} step {step_no} was "
-            f"written by a different run: config fingerprint "
-            f"{saved_cfp!r} vs {cfp!r}, operator fingerprint "
-            f"{saved_ofp!r} vs {ofp!r}; point checkpoint_dir at a fresh "
-            f"directory (or delete the stale steps) to start over")
-    state = SolverState.from_tree(
-        mgr.restore(step_no, SolverState.host_template()),
-        config_fp=cfp, op_fp=ofp)
-    if state.k != k:
-        raise ValueError(
-            f"checkpoint at {cfg.checkpoint_dir!r} targets rank "
-            f"{state.k}, this call asked for rank {k}")
-    return state.replace(Q=op.from_host(state.Q))
+    for step_no in reversed(mgr.all_steps()):
+        try:
+            extra = mgr.read_meta(step_no).get("extra", {})
+            saved_cfp = extra.get("config_fp")
+            saved_ofp = extra.get("op_fp")
+            if saved_cfp != cfp or saved_ofp != ofp:
+                raise InputError(
+                    f"checkpoint_dir={cfg.checkpoint_dir!r} step "
+                    f"{step_no} was written by a different run: config "
+                    f"fingerprint {saved_cfp!r} vs {cfp!r}, operator "
+                    f"fingerprint {saved_ofp!r} vs {ofp!r}; point "
+                    f"checkpoint_dir at a fresh directory (or delete "
+                    f"the stale steps) to start over")
+            state = SolverState.from_tree(
+                mgr.restore(step_no, SolverState.host_template()),
+                config_fp=cfp, op_fp=ofp)
+            if not np.all(np.isfinite(state.Q)):
+                raise CheckpointCorruptError(
+                    f"step {step_no}: non-finite iterate (the state was "
+                    f"saved mid-corruption)")
+        except CheckpointCorruptError as e:
+            quarantined = mgr.quarantine(step_no)
+            if telemetry is not None:
+                telemetry.record("checkpoint", "quarantine",
+                                 step=int(step_no), path=quarantined,
+                                 error=str(e))
+            continue                    # fall back to the previous step
+        if state.k != k:
+            raise InputError(
+                f"checkpoint at {cfg.checkpoint_dir!r} targets rank "
+                f"{state.k}, this call asked for rank {k}")
+        return state.replace(Q=op.from_host(state.Q))
+    return None
 
 
 def _save_state(mgr, op, state: SolverState) -> None:
@@ -278,29 +344,181 @@ def _save_state(mgr, op, state: SolverState) -> None:
                     "op_fp": state.op_fp})
 
 
-def _run_block(op: LinearOperator, k: int, cfg: SVDConfig, warm=None):
-    """init/step/finalize composed into the one-shot driver loop —
-    bitwise-identical to the pre-state-machine closed loop (asserted in
-    tests/test_solver_state.py) — plus the checkpoint writes and the
-    ``on_iteration`` trace hook between steps.
+def _carry_state(st: SolverState | None, op: LinearOperator,
+                 telemetry: FaultTelemetry) -> SolverState | None:
+    """Pull the warm iterate off a just-OOM'd operator so the demoted
+    tier resumes from it instead of a cold start.  The cumulative
+    ``passes``/``bytes_moved`` accounting rides along, so the reported
+    totals stay conserved across the tier change.  If even the read-back
+    fails (the device is truly wedged) the demotion falls back to a cold
+    start and the telemetry records the lost iterate."""
+    if st is None:
+        return None
+    try:
+        # gap scalars belong to the old operator's stream; drop them so
+        # the demoted tier re-measures convergence from its own sweeps
+        return st.replace(Q=np.asarray(op.to_host(st.Q), np.float32),
+                          gap=None, prev_gap=None)
+    except Exception as e:             # noqa: BLE001 - device is gone
+        telemetry.record("device_oom", "carry_failed", error=str(e))
+        return None
+
+
+def _drive(op: LinearOperator, k: int, cfg: SVDConfig, warm, mgr,
+           telemetry: FaultTelemetry, carried: SolverState | None,
+           cell: dict) -> SVDResult:
+    """One tier's worth of the solve loop: init (or adopt the iterate
+    carried down from a demoted tier), iterate with the numeric health
+    guard, checkpoint on cadence, finalize.
+
+    ``cell["state"]`` always holds the newest state so ``_run_block``
+    can carry it across a device-OOM demotion.  A
+    ``NumericalHealthError`` from ``step`` rolls the loop back to the
+    last CONFIRMED-healthy state (``good``) and re-runs — the operator
+    is deterministic, so a transient corruption (bit flip, injected
+    fault) replays to the bitwise fault-free trajectory; the state's
+    delta accounting resumes from ``good``, so the reported passes match
+    the fault-free count and the physically discarded sweeps show up
+    only in the fault telemetry.  ``cfg.health_retries`` consecutive
+    failures raise ``FaultExhaustedError``.
     """
-    op.reset_counters()
-    mgr = None
-    if cfg.checkpoint_dir is not None:
-        from repro.checkpoint import CheckpointManager
-        mgr = CheckpointManager(cfg.checkpoint_dir)
-    state = init_state(op, k, cfg, warm=warm)
+    if carried is not None:
+        state = carried.replace(Q=op.from_host(carried.Q),
+                                op_fp=op.fingerprint)
+    else:
+        state = init_state(op, k, cfg, warm=warm, telemetry=telemetry)
+    cell["state"] = state
+    good = state                        # last confirmed-healthy state
+    health_attempts = 0
     last_saved = state.it if state.it else None         # resumed at it
-    while not state.converged and state.it < cfg.max_iters:
-        state = step(op, state, cfg)
+    while True:
+        if state.converged or state.it >= cfg.max_iters:
+            # a run that exits on max_iters never synced its final gap:
+            # surface NaN factors as a typed, recoverable error instead
+            # of silently returning garbage with converged=False
+            if (not cfg.force_iters and not state.converged
+                    and state.gap is not None):
+                try:
+                    _check_health(host_sync_scalar(state.gap),
+                                  int(state.Q.shape[1]),
+                                  f"at iteration {state.it} (final)")
+                except NumericalHealthError as err:
+                    state, good, health_attempts = _recover(
+                        op, cfg, err, good, health_attempts, telemetry)
+                    cell["state"] = state
+                    continue
+            break
+        p0 = int(op.passes)
+        try:
+            new = step(op, state, cfg)
+        except NumericalHealthError as err:
+            state, good, health_attempts = _recover(
+                op, cfg, err, good, health_attempts, telemetry,
+                discarded_passes=int(op.passes) - p0)
+            cell["state"] = state
+            continue
+        # Track the newest CONFIRMED-healthy state: without lagged sync
+        # the guard just checked `new` itself; with it, the synced gap
+        # belonged to the parent, so only the parent is confirmed.
+        if cfg.force_iters:
+            good = new                  # benchmark mode: no guard at all
+        elif not op.lagged_sync:
+            good, health_attempts = new, 0
+        elif state.prev_gap is not None:
+            good, health_attempts = state, 0
+        state = new
+        cell["state"] = state
         if mgr is not None and state.it % cfg.checkpoint_every == 0:
             _save_state(mgr, op, state)                 # syncs the gap
             last_saved = state.it
+        fault_hook("kill", telemetry)   # chaos: die AFTER the checkpoint
         if cfg.on_iteration is not None:
             cfg.on_iteration(state)
     if mgr is not None and last_saved != state.it:
         _save_state(mgr, op, state)                     # final state
     return finalize(op, state, cfg)
+
+
+def _recover(op, cfg, err: NumericalHealthError, good: SolverState,
+             attempts: int, telemetry: FaultTelemetry,
+             discarded_passes: int = 0):
+    """Shared health-guard recovery: bounded rollback/re-orth to the
+    last confirmed-healthy state, or ``FaultExhaustedError`` once
+    ``cfg.health_retries`` consecutive recoveries failed to stick."""
+    attempts += 1
+    if attempts > cfg.health_retries:
+        raise FaultExhaustedError(
+            f"numeric health guard tripped {attempts} times in a row "
+            f"({err}); rollback cannot recover — the input data or the "
+            f"sweep_dtype={cfg.sweep_dtype!r} precision is unrecoverably "
+            f"ill-conditioned (raise SVDConfig.health_retries only if "
+            f"the corruption source is transient)") from err
+    if err.kind == "orth":
+        # the basis drifted off the Stiefel manifold: re-orthonormalize
+        # in place (same subspace, clean Gram factors) and re-measure
+        action = "reorth"
+        state = good.replace(Q=op.orth(good.Q), gap=None, prev_gap=None)
+    else:
+        # NaN/Inf: the iterate is garbage — replay from the confirmed
+        # state; the step is deterministic, so a transient corruption
+        # retries onto the bitwise fault-free trajectory
+        action = "rollback"
+        state = good
+    telemetry.record("health", action, it=int(good.it), kind=err.kind,
+                     error=str(err), discarded_passes=int(discarded_passes))
+    return state, good, attempts
+
+
+def _run_block(op: LinearOperator, k: int, cfg: SVDConfig, warm=None):
+    """init/step/finalize composed into the self-healing driver loop —
+    bitwise-identical to the pre-state-machine closed loop on a healthy
+    run (asserted in tests/test_solver_state.py) — plus the checkpoint
+    writes and the ``on_iteration`` trace hook between steps.
+
+    Resilience (the fault-tolerance layer, see ``core/faults.py``):
+
+    * a per-solve ``FaultTelemetry`` + ``RetryPolicy`` is installed on
+      the operator (``set_resilience``), so the staging hops retry
+      transient I/O with bounded exponential backoff and every injected
+      fault / recovery action lands in ``SVDResult.faults``;
+    * ``NumericalHealthError`` from the step loop rolls back to the last
+      confirmed-healthy state (``_drive``/``_recover``);
+    * a device OOM (``RESOURCE_EXHAUSTED``) demotes down the memory
+      ladder — dense/sharded -> host-blocked -> memmap — carrying the
+      warm iterate and the cumulative pass/byte accounting, unless
+      ``cfg.demote_on_oom`` is off.  The disk tier is the bottom: OOM
+      there is terminal (``FaultExhaustedError``).
+    """
+    telemetry = FaultTelemetry()
+    policy = RetryPolicy(max_attempts=cfg.io_retries,
+                         base_delay=cfg.io_retry_backoff)
+    mgr = None
+    if cfg.checkpoint_dir is not None:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(cfg.checkpoint_dir)
+    carried = None
+    while True:
+        op.reset_counters()
+        op.set_resilience(telemetry, policy)
+        cell: dict = {"state": None}
+        try:
+            res = _drive(op, k, cfg, warm, mgr, telemetry, carried, cell)
+            return res._replace(faults=telemetry.snapshot())
+        except Exception as e:
+            if not (cfg.demote_on_oom and is_oom_error(e)):
+                raise
+            new_op = op.demote(cfg)
+            if new_op is None:
+                raise FaultExhaustedError(
+                    f"device OOM on the {op.backend!r} backend with no "
+                    f"lower tier to demote to; shrink the problem, lower "
+                    f"n_blocks/host_budget_bytes pressure, or set "
+                    f"demote_on_oom=False to see the raw error") from e
+            carried = _carry_state(cell["state"], op, telemetry)
+            telemetry.record(
+                "device_oom", "demote", frm=op.backend, to=new_op.backend,
+                it=0 if carried is None else int(carried.it))
+            op, warm = new_op, None     # carried iterate supersedes warm
 
 
 def _deflation_converged(iters, cfg: SVDConfig) -> bool:
@@ -317,6 +535,29 @@ def _deflation_converged(iters, cfg: SVDConfig) -> bool:
 # Per-backend assembly
 # ---------------------------------------------------------------------------
 
+def _validate_problem(shape, k: int, source=None) -> None:
+    """Reject degenerate problems with a typed, actionable error BEFORE
+    any operator is built (a zero-dim matrix or an over-asked rank used
+    to surface as a shape error deep inside a jitted sweep)."""
+    m, n = int(shape[0]), int(shape[1])
+    what = f" (from {source!r})" if source is not None else ""
+    if m < 1 or n < 1:
+        raise InputError(
+            f"svd() input has shape {(m, n)}{what}: both dimensions must "
+            f"be >= 1 — a zero-row/zero-column matrix has no singular "
+            f"triplets to compute")
+    if not isinstance(k, (int, np.integer)) or isinstance(k, bool):
+        raise InputError(
+            f"k must be a positive int, got {type(k).__name__} {k!r}")
+    if k < 1:
+        raise InputError(f"k must be >= 1, got {k}")
+    if k > min(m, n):
+        raise InputError(
+            f"k={k} exceeds min(m, n)={min(m, n)} for input of shape "
+            f"{(m, n)}{what}; a rank-{k} truncated SVD does not exist — "
+            f"request at most min(m, n) triplets")
+
+
 def _pick_seed(warm, transposed: bool):
     """The driver iterates in the tall orientation, so the seed subspace
     is the previous V — unless the input was transposed in, where the
@@ -330,6 +571,7 @@ def _pick_seed(warm, transposed: bool):
 def _dense_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     A = jnp.asarray(A, jnp.float32)
     m, n = A.shape
+    _validate_problem((m, n), k)
     bpp = m * n * jnp.dtype(cfg.sweep_dtype).itemsize
     if cfg.method == "block":
         tall = m >= n
@@ -356,6 +598,7 @@ def _sharded_svd(A, k: int, mesh, axes, cfg: SVDConfig,
     if transposed:
         A = A.T
         m, n = n, m
+    _validate_problem((m, n), k)
     bpp = m * n * jnp.dtype(cfg.sweep_dtype).itemsize
     if cfg.method == "block":
         if cfg.faithful:
@@ -396,11 +639,13 @@ def _hostblocked_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
         host, transposed = A, False        # injected ops are already tall
     else:
         A_host = np.asarray(A)
+        _validate_problem(A_host.shape, k)
         m, n = A_host.shape
         transposed = m < n
         if transposed:
             A_host = A_host.T
         host = HostBlockedMatrix(A_host, cfg.n_blocks, stage_dtype=sd)
+    _validate_problem((host.m, host.n), k)
     if cfg.method == "block":
         op = HostBlockedOperator(host)
         res = _run_block(op, k, cfg, warm=_pick_seed(warm, transposed))
@@ -444,10 +689,13 @@ def _memmap_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
             from repro.core.diskio import open_matrix_memmap
             A = open_matrix_memmap(A)
         m, n = A.shape
+        _validate_problem((m, n), k,
+                          source=getattr(A, "filename", None))
         transposed = m < n                 # CSVD orientation: row-block
         src = A.T if transposed else A     # the tall view of the memmap
         host = MemmapMatrix(src, cfg.n_blocks, stage_dtype=sd,
                             host_budget_bytes=cfg.host_budget_bytes)
+    _validate_problem((host.m, host.n), k)
     if cfg.method == "block":
         op = MemmapOperator(host)
         res = _run_block(op, k, cfg, warm=_pick_seed(warm, transposed))
@@ -475,6 +723,11 @@ def _memmap_svd(A, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
 def _sparsestream_svd(sp, k: int, cfg: SVDConfig,
                       op_cls=SparseStreamOperator, warm=None) -> SVDResult:
     from repro.core.sparse import _sparse_deflation
+    # duck-typed streamed sources expose either .shape or (.m, .n)
+    shape = getattr(sp, "shape", None)
+    if shape is None:
+        shape = (getattr(sp, "m", 1), getattr(sp, "n", 1))
+    _validate_problem(shape, k)
     if cfg.method == "block":
         op = op_cls(sp, block_rows=cfg.block_rows,
                     sweep_dtype=cfg.sweep_dtype)
@@ -514,19 +767,35 @@ def _path_svd(path, k: int, cfg: SVDConfig, warm=None) -> SVDResult:
     """Dispatch a dataset path: ``.npy`` -> disk tier (memmap), scipy
     ``.npz`` / MatrixMarket ``.mtx`` -> sparse stream."""
     import os
+    import zipfile
     p = os.fspath(path)
     low = p.lower()
     if low.endswith(".npy"):
         return _memmap_svd(p, k, cfg, warm=warm)
     if low.endswith(".npz"):
         import scipy.sparse
-        return _scipysparse_svd(scipy.sparse.load_npz(p), k, cfg,
-                                warm=warm)
+        try:
+            sp = scipy.sparse.load_npz(p)
+        except (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile) as e:
+            raise InputError(
+                f"{p!r} is not a readable scipy-sparse .npz "
+                f"({type(e).__name__}: {e}); re-save it with "
+                f"scipy.sparse.save_npz or point svd() at an intact "
+                f"file") from e
+        return _scipysparse_svd(sp, k, cfg, warm=warm)
     if low.endswith((".mtx", ".mtx.gz")):
         import scipy.io
-        return _scipysparse_svd(scipy.io.mmread(p).tocsr(), k, cfg,
-                                warm=warm)
-    raise ValueError(
+        try:
+            sp = scipy.io.mmread(p).tocsr()
+        except (OSError, ValueError, EOFError) as e:
+            raise InputError(
+                f"{p!r} is not a readable MatrixMarket file "
+                f"({type(e).__name__}: {e}); re-export it with "
+                f"scipy.io.mmwrite or point svd() at an intact file"
+            ) from e
+        return _scipysparse_svd(sp, k, cfg, warm=warm)
+    raise InputError(
         f"svd() path input must end in one of {_PATH_SUFFIXES}, got {p!r}")
 
 
@@ -535,6 +804,7 @@ def _operator_svd(op: LinearOperator, k: int, cfg: SVDConfig,
     if cfg.method != "block":
         raise ValueError("custom LinearOperator inputs run the shared "
                          "block driver; method must be 'block'")
+    _validate_problem(op.shape, k)
     op_sd = getattr(op, "sweep_dtype", cfg.sweep_dtype)
     if resolve_sweep_dtype(op_sd) != resolve_sweep_dtype(cfg.sweep_dtype):
         raise ValueError(
@@ -622,7 +892,7 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
     if all(hasattr(A, attr) for attr in
            ("matmat", "rmatmat", "gram_chain", "range_sketch")):
         return _sparsestream_svd(A, k, cfg, warm=_warm)
-    raise TypeError(
+    raise InputError(
         f"svd() cannot dispatch on input of type {type(A).__name__}: "
         "expected a jax array (serial), an array plus mesh= (sharded), "
         "a numpy array or HostBlockedMatrix (out-of-core), a .npy/.npz/"

@@ -28,6 +28,11 @@ EXPECTED_ALL = {
     "DenseStreamOperator", "blocked_gram", "tiled_gram",
     "blocked_deflated_matvec", "Partition", "make_partition", "BatchPlan",
     "make_batch_plan", "symmetric_tasks",
+    # fault tolerance: typed errors + the chaos-injection harness
+    "SVDError", "InputError", "FaultExhaustedError",
+    "CheckpointCorruptError", "NumericalHealthError", "DeviceOOMFault",
+    "FaultPlan", "FaultSpec", "FaultTelemetry", "RetryPolicy",
+    "inject_faults",
     # deprecated legacy entrypoints + result-type aliases
     "tsvd", "dist_tsvd", "oom_tsvd", "sparse_tsvd",
     "TSVDResult", "DistTSVDResult", "OOMResult", "SparseTSVDResult",
@@ -51,6 +56,10 @@ EXPECTED_CONFIG_FIELDS = {
     "checkpoint_dir": None,
     "checkpoint_every": 1,
     "on_iteration": None,
+    "io_retries": 3,
+    "io_retry_backoff": 0.05,
+    "health_retries": 3,
+    "demote_on_oom": True,
 }
 
 
@@ -88,9 +97,11 @@ def test_svdconfig_frozen_and_hashable():
 def test_svdresult_field_snapshot():
     assert SVDResult._fields == ("U", "S", "V", "iters", "passes_over_A",
                                  "bytes_per_pass", "converged", "backend",
-                                 "bytes_moved")
-    # bytes_moved is defaulted so legacy 8-positional construction works
-    assert SVDResult._field_defaults == {"bytes_moved": None}
+                                 "bytes_moved", "faults")
+    # trailing fields are defaulted so legacy 8-positional construction
+    # keeps working
+    assert SVDResult._field_defaults == {"bytes_moved": None,
+                                         "faults": None}
 
 
 @pytest.mark.parametrize("bad", [
@@ -108,6 +119,9 @@ def test_svdresult_field_snapshot():
     {"checkpoint_every": 0},
     {"checkpoint_dir": "x", "method": "gram"},
     {"on_iteration": print, "method": "gramfree"},
+    {"io_retries": 0},
+    {"io_retry_backoff": -0.1},
+    {"health_retries": -1},
 ])
 def test_svdconfig_validates_in_one_place(bad):
     with pytest.raises(ValueError):

@@ -1,0 +1,401 @@
+"""The chaos suite: deterministic fault schedules through svd().
+
+Every single-fault plan must complete the solve with sigmas matching
+the fault-free run (bitwise where the recovery replays the trajectory,
+fp-tolerance where a tier demotion changes the sweep kernels), record
+the injected fault and the recovery action in ``SVDResult.faults``, and
+conserve the pass accounting modulo the physically retried work.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (FaultPlan, FaultSpec, FaultTelemetry, RetryPolicy,
+                        stage_to_disk, svd)
+from repro.core.errors import (CheckpointCorruptError, DeviceOOMFault,
+                               FaultExhaustedError, H2DCopyFault,
+                               InputError, KilledFault,
+                               NumericalHealthError, SVDError,
+                               TransientIOFault, is_oom_error)
+from repro.core.faults import (active_plan, fault_hook, inject_faults,
+                               maybe_corrupt, retry_io)
+from repro.core.svd import _check_health
+
+from conftest import make_lowrank
+
+K = 6
+SPECTRUM = np.concatenate([np.linspace(15, 3, K), 0.5 ** np.arange(1, 7)])
+
+
+@pytest.fixture
+def A(rng):
+    return make_lowrank(rng, 96, 40, SPECTRUM)
+
+
+def _sigmas(res):
+    return np.asarray(res.S)
+
+
+# ---------------------------------------------------------------------------
+# Harness unit tests: the schedule is the test, so the schedule must be
+# exactly right
+# ---------------------------------------------------------------------------
+
+def test_faultspec_validates():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="gpu_fire")
+    with pytest.raises(ValueError, match="count >= 1"):
+        FaultSpec(site="h2d", count=0)
+    with pytest.raises(ValueError, match="at >= 0"):
+        FaultSpec(site="h2d", at=-1)
+    with pytest.raises(ValueError, match="'raise' or 'exit'"):
+        FaultSpec(site="kill", mode="segfault")
+
+
+def test_faultplan_arrival_window():
+    plan = FaultPlan(FaultSpec(site="disk_read", at=2, count=2))
+    hits = [plan.arrive("disk_read") is not None for _ in range(6)]
+    assert hits == [False, False, True, True, False, False]
+    # counters are per-site: other sites never advance this window
+    assert plan.arrive("h2d") is None
+    assert plan.arrivals == {"disk_read": 6, "h2d": 1}
+
+
+def test_faultplan_accepts_list_or_varargs():
+    a = FaultPlan(FaultSpec(site="h2d"), FaultSpec(site="kill"))
+    b = FaultPlan([FaultSpec(site="h2d"), FaultSpec(site="kill")])
+    assert a.specs == b.specs
+    with pytest.raises(TypeError):
+        FaultPlan("h2d")
+
+
+def test_inject_faults_scopes_and_restores():
+    assert active_plan() is None
+    with inject_faults(FaultPlan(FaultSpec(site="h2d"))) as plan:
+        assert active_plan() is plan
+        with pytest.raises(H2DCopyFault):
+            fault_hook("h2d")
+    assert active_plan() is None
+    fault_hook("h2d")               # no plan: free pass-through
+
+
+def test_maybe_corrupt_plants_one_nan():
+    Z = np.ones((3, 3), np.float32)
+    with inject_faults(FaultPlan(FaultSpec(site="sweep"))):
+        out = maybe_corrupt("sweep", Z)
+    assert np.isnan(out[0, 0]) and Z[0, 0] == 1.0   # input untouched
+    import jax.numpy as jnp
+    with inject_faults(FaultPlan(FaultSpec(site="sweep"))):
+        out = maybe_corrupt("sweep", jnp.ones((2, 2)))
+    assert bool(jnp.isnan(out[0, 0]))
+
+
+def test_retry_policy_deterministic_bounded_jitter():
+    pol = RetryPolicy(max_attempts=5, base_delay=0.1, max_delay=0.5)
+    for a in (1, 2, 3, 4):
+        d1, d2 = pol.delay(a, "disk_read"), pol.delay(a, "disk_read")
+        assert d1 == d2                      # pure function of (site, a)
+        raw = min(0.5, 0.1 * 2 ** (a - 1))
+        assert 0.5 * raw <= d1 < raw         # jitter in [0.5, 1.0)
+    assert pol.delay(1, "disk_read") != pol.delay(1, "h2d")
+
+
+def test_retry_io_succeeds_after_transients():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("EIO")
+        return 42
+
+    tel = FaultTelemetry()
+    pol = RetryPolicy(max_attempts=3, base_delay=0.0)
+    assert retry_io(flaky, site="disk_read", policy=pol,
+                    telemetry=tel) == 42
+    assert tel.counters == {"disk_read.retry": 2}
+
+
+def test_retry_io_exhaustion_is_typed_with_cause():
+    pol = RetryPolicy(max_attempts=2, base_delay=0.0)
+    with pytest.raises(FaultExhaustedError,
+                       match="io_retries") as exc:
+        retry_io(lambda: (_ for _ in ()).throw(OSError("EIO")),
+                 site="disk_read", policy=pol)
+    assert isinstance(exc.value.__cause__, OSError)
+
+
+def test_retry_io_never_retries_oom():
+    calls = {"n": 0}
+
+    def oom():
+        calls["n"] += 1
+        raise DeviceOOMFault("allocator dry")
+
+    with pytest.raises(DeviceOOMFault):
+        retry_io(oom, site="h2d",
+                 policy=RetryPolicy(max_attempts=5, base_delay=0.0))
+    assert calls["n"] == 1
+
+
+def test_error_hierarchy_bridges_builtins():
+    # typed errors stay catchable by the builtin classes existing code
+    # already catches
+    assert issubclass(InputError, (SVDError, TypeError, ValueError))
+    assert issubclass(TransientIOFault, (SVDError, OSError))
+    assert issubclass(CheckpointCorruptError, (SVDError, RuntimeError))
+    assert issubclass(NumericalHealthError, (SVDError, ArithmeticError))
+    assert is_oom_error(DeviceOOMFault("x"))
+    assert is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+    assert not is_oom_error(OSError("EIO"))
+
+
+def test_check_health_kinds():
+    _check_health(0.5, 6, "here")                       # healthy: no-op
+    with pytest.raises(NumericalHealthError) as exc:
+        _check_health(float("nan"), 6, "here")
+    assert exc.value.kind == "nonfinite"
+    with pytest.raises(NumericalHealthError) as exc:
+        _check_health(25.0, 6, "here")                  # gap > l: drift
+    assert exc.value.kind == "orth"
+    with pytest.raises(NumericalHealthError) as exc:
+        _check_health(-1.0, 6, "here")
+    assert exc.value.kind == "orth"
+
+
+# ---------------------------------------------------------------------------
+# Transient I/O faults: retried under backoff, bitwise-identical result
+# ---------------------------------------------------------------------------
+
+def _disk_solve(path, **overrides):
+    return svd(path, K, method="block", seed=1, n_blocks=4, eps=1e-6,
+               io_retry_backoff=0.0, **overrides)
+
+
+def test_transient_disk_fault_is_retried_bitwise(A, tmp_path):
+    p = stage_to_disk(A, tmp_path / "a.npy")
+    ref = _disk_solve(p)
+    with inject_faults(FaultPlan(FaultSpec(site="disk_read", at=3,
+                                           count=2))):
+        res = _disk_solve(p)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.converged
+    assert res.faults["counters"] == {"disk_read.injected": 2,
+                                      "disk_read.retry": 2}
+    # retried reads re-count their bytes (physical truth) but the solve
+    # logic replayed nothing: reported passes match the fault-free run
+    assert res.passes_over_A == ref.passes_over_A
+
+
+def test_transient_h2d_fault_is_retried_bitwise(A):
+    ref = svd(A, K, method="block", seed=1, n_blocks=4)
+    with inject_faults(FaultPlan(FaultSpec(site="h2d", at=1, count=1))):
+        res = svd(A, K, method="block", seed=1, n_blocks=4,
+                  io_retry_backoff=0.0)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.faults["counters"] == {"h2d.injected": 1, "h2d.retry": 1}
+
+
+def test_permanent_disk_fault_exhausts_with_giveup(A, tmp_path):
+    p = stage_to_disk(A, tmp_path / "a.npy")
+    with inject_faults(FaultPlan(FaultSpec(site="disk_read", at=0,
+                                           count=1000))):
+        with pytest.raises(FaultExhaustedError, match="disk_read"):
+            _disk_solve(p, io_retries=2)
+
+
+# ---------------------------------------------------------------------------
+# Numeric health guard: NaN sweep -> rollback -> fault-free trajectory
+# ---------------------------------------------------------------------------
+
+def test_sweep_nan_rolls_back_bitwise_lagged(A):
+    """Dense backend (lagged sync): the corruption is detected one
+    iteration late, rolled back past the poisoned state, and the retry
+    replays the exact fault-free trajectory."""
+    import jax.numpy as jnp
+    ref = svd(jnp.asarray(A), K, method="block", seed=1)
+    with inject_faults(FaultPlan(FaultSpec(site="sweep", at=1, count=1))):
+        res = svd(jnp.asarray(A), K, method="block", seed=1)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.converged
+    assert res.faults["counters"]["sweep.injected"] == 1
+    assert res.faults["counters"]["health.rollback"] == 1
+    # discarded work is telemetry, not result accounting
+    assert res.passes_over_A == ref.passes_over_A
+    ev = [e for e in res.faults["events"] if e["action"] == "rollback"]
+    assert ev and ev[0]["kind"] == "nonfinite"
+    assert ev[0]["discarded_passes"] >= 1
+
+
+def test_sweep_nan_rolls_back_bitwise_synchronous(A):
+    """Streamed backend (no lag): the same drill detected in-iteration."""
+    from repro.core import DenseStreamOperator
+    ref = svd(DenseStreamOperator(A), K, method="block", seed=1)
+    with inject_faults(FaultPlan(FaultSpec(site="sweep", at=2, count=1))):
+        res = svd(DenseStreamOperator(A), K, method="block", seed=1)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.faults["counters"]["health.rollback"] == 1
+    assert res.passes_over_A == ref.passes_over_A
+
+
+def test_persistent_nan_exhausts_health_retries(A):
+    import jax.numpy as jnp
+    with inject_faults(FaultPlan(FaultSpec(site="sweep", at=0,
+                                           count=1000))):
+        with pytest.raises(FaultExhaustedError, match="health guard"):
+            svd(jnp.asarray(A), K, method="block", seed=1,
+                health_retries=2)
+
+
+# ---------------------------------------------------------------------------
+# Device OOM -> graceful tier demotion, warm iterate carried
+# ---------------------------------------------------------------------------
+
+def test_oom_demotes_dense_to_hostblocked(A):
+    import jax.numpy as jnp
+    ref = svd(jnp.asarray(A), K, method="block", seed=1)
+    with inject_faults(FaultPlan(FaultSpec(site="device_oom", at=3,
+                                           count=1))):
+        res = svd(jnp.asarray(A), K, method="block", seed=1)
+    assert res.backend == "hostblocked"          # finished on the new tier
+    assert res.converged
+    np.testing.assert_allclose(_sigmas(res), _sigmas(ref), rtol=1e-4)
+    c = res.faults["counters"]
+    assert c["device_oom.injected"] == 1 and c["device_oom.demote"] == 1
+    ev = [e for e in res.faults["events"] if e["action"] == "demote"]
+    assert ev[0]["frm"] == "dense" and ev[0]["to"] == "hostblocked"
+
+
+def test_oom_demotes_hostblocked_to_memmap_conserving_passes(A):
+    """force_iters pins the iteration count, so the pass total is exactly
+    the per-backend formula: both tiers stream at 1 pass/iteration, plus
+    the finalize pass — demotion must not lose or double-count any."""
+    iters = 10
+    ref = svd(A, K, method="block", seed=1, n_blocks=4,
+              force_iters=True, max_iters=iters)
+    with inject_faults(FaultPlan(FaultSpec(site="device_oom", at=4,
+                                           count=1))):
+        res = svd(A, K, method="block", seed=1, n_blocks=4,
+                  force_iters=True, max_iters=iters)
+    assert res.backend == "memmap"
+    np.testing.assert_allclose(_sigmas(res), _sigmas(ref), rtol=1e-3)
+    assert ref.passes_over_A == iters + 1        # 1/iter + finalize
+    assert res.passes_over_A == ref.passes_over_A
+    ev = [e for e in res.faults["events"] if e["action"] == "demote"]
+    assert ev[0]["frm"] == "hostblocked" and ev[0]["to"] == "memmap"
+    assert ev[0]["it"] == 4                      # warm iterate carried
+
+
+def test_oom_on_disk_tier_is_terminal(A, tmp_path):
+    p = stage_to_disk(A, tmp_path / "a.npy")
+    with inject_faults(FaultPlan(FaultSpec(site="device_oom", at=1,
+                                           count=1))):
+        with pytest.raises(FaultExhaustedError, match="no lower tier"):
+            _disk_solve(p)
+
+
+def test_demote_on_oom_off_surfaces_raw_error(A):
+    with inject_faults(FaultPlan(FaultSpec(site="device_oom", at=1,
+                                           count=1))):
+        with pytest.raises(DeviceOOMFault, match="RESOURCE_EXHAUSTED"):
+            svd(A, K, method="block", seed=1, n_blocks=4,
+                demote_on_oom=False)
+
+
+# ---------------------------------------------------------------------------
+# Kill + crash-safe checkpoints: quarantine, fallback, bitwise resume
+# ---------------------------------------------------------------------------
+
+def _ckpt_solve(A, d, **overrides):
+    return svd(A, K, method="block", seed=1, n_blocks=4,
+               checkpoint_dir=str(d), checkpoint_every=1, **overrides)
+
+
+def test_kill_after_checkpoint_resumes_bitwise(A, tmp_path):
+    ref = svd(A, K, method="block", seed=1, n_blocks=4)
+    d = tmp_path / "ckpt"
+    with inject_faults(FaultPlan(FaultSpec(site="kill", at=2, count=1))):
+        with pytest.raises(KilledFault):
+            _ckpt_solve(A, d)
+    res = _ckpt_solve(A, d)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.converged
+    # delta-stamped accounting: killed + resumed totals == one-shot run
+    assert res.passes_over_A == ref.passes_over_A
+
+
+def test_kill_inside_checkpoint_write_never_loses_a_step(A, tmp_path):
+    """The classic torn write: die after the tmp dir is staged but
+    before the atomic publish.  The previously published step must
+    survive intact and resume must complete bitwise."""
+    ref = svd(A, K, method="block", seed=1, n_blocks=4)
+    d = tmp_path / "ckpt"
+    with inject_faults(FaultPlan(
+            FaultSpec(site="checkpoint_write", at=2, count=1))):
+        with pytest.raises(KilledFault):
+            _ckpt_solve(A, d)
+    steps = [n for n in os.listdir(d)
+             if n.startswith("step_") and "." not in n]
+    assert steps, "no intact step survived the torn write"
+    res = _ckpt_solve(A, d)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+
+
+def test_corrupt_latest_checkpoint_is_quarantined(A, tmp_path):
+    ref = svd(A, K, method="block", seed=1, n_blocks=4)
+    d = tmp_path / "ckpt"
+    with inject_faults(FaultPlan(FaultSpec(site="kill", at=2, count=1))):
+        with pytest.raises(KilledFault):
+            _ckpt_solve(A, d)
+    steps = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    with open(d / steps[-1] / "arrays.npz", "wb") as f:
+        f.write(b"this is not a zip file")
+    res = _ckpt_solve(A, d)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))
+    assert res.faults["counters"]["checkpoint.quarantine"] == 1
+    corrupt = [n for n in os.listdir(d) if n.endswith(".corrupt")]
+    assert corrupt == [steps[-1] + ".corrupt"]   # evidence preserved
+
+
+def test_all_checkpoints_corrupt_falls_back_to_cold_start(A, tmp_path):
+    ref = svd(A, K, method="block", seed=1, n_blocks=4)
+    d = tmp_path / "ckpt"
+    with inject_faults(FaultPlan(FaultSpec(site="kill", at=2, count=1))):
+        with pytest.raises(KilledFault):
+            _ckpt_solve(A, d)
+    for name in os.listdir(d):
+        if name.startswith("step_"):
+            with open(d / name / "arrays.npz", "wb") as f:
+                f.write(b"garbage")
+    res = _ckpt_solve(A, d)
+    assert np.array_equal(_sigmas(ref), _sigmas(res))    # cold = same run
+    assert res.faults["counters"]["checkpoint.quarantine"] >= 1
+
+
+def test_quarantine_collision_suffixes(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    for expected in ("step_00000003.corrupt", "step_00000003.corrupt1"):
+        os.makedirs(tmp_path / "step_00000003")
+        assert os.path.basename(mgr.quarantine(3)) == expected
+    assert mgr.all_steps() == []
+
+
+def test_manager_read_errors_are_typed(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": np.ones(3, np.float32)})
+    with open(tmp_path / "step_00000001" / "meta.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointCorruptError, match="meta.json"):
+        mgr.read_meta(1)
+    with open(tmp_path / "step_00000001" / "arrays.npz", "wb") as f:
+        f.write(b"torn")
+    with pytest.raises(CheckpointCorruptError, match="arrays.npz"):
+        mgr.restore(1, {"x": np.ones(3, np.float32)})
+
+
+def test_faults_field_present_and_empty_on_clean_runs(A):
+    res = svd(A, K, method="block", seed=1, n_blocks=4)
+    assert res.faults == {"counters": {}, "events": []}

@@ -316,3 +316,87 @@ def test_legacy_injected_op_and_stage_mismatch(rng):
     op2 = HostBlockedMatrix(A, 2)  # fp32-staged
     with pytest.raises(ValueError, match="stage"):
         svd(op2, 2, method="block", sweep_dtype="bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# Hostile inputs: corrupt files and degenerate problems raise typed,
+# actionable errors (never a raw numpy/scipy traceback, never garbage)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_npy_raises_input_error(tmp_path):
+    from repro.core import InputError
+    p = tmp_path / "a.npy"
+    p.write_bytes(b"\x93NUMPY garbage that is not a header")
+    with pytest.raises(InputError, match=r"\.npy"):
+        svd(str(p), 2)
+    # truncated: a valid header, then the data cut off mid-array
+    q = tmp_path / "b.npy"
+    np.save(q, np.ones((64, 32), np.float32))
+    q.write_bytes(q.read_bytes()[:200])
+    with pytest.raises(InputError):
+        svd(str(q), 2)
+
+
+def test_missing_and_non_matrix_npy(tmp_path):
+    from repro.core import InputError
+    with pytest.raises(InputError, match="readable"):
+        svd(str(tmp_path / "nope.npy"), 2)
+    p = tmp_path / "vec.npy"
+    np.save(p, np.ones(16, np.float32))          # 1-D: not a matrix
+    with pytest.raises(InputError, match="2-D"):
+        svd(str(p), 2)
+
+
+def test_corrupt_npz_and_mtx_raise_input_error(tmp_path):
+    from repro.core import InputError
+    p = tmp_path / "a.npz"
+    p.write_bytes(b"PK\x03\x04 truncated zip data")
+    with pytest.raises(InputError, match="npz"):
+        svd(str(p), 2)
+    m = tmp_path / "a.mtx"
+    m.write_text("%%MatrixMarket matrix coordinate real general\n3 3")
+    with pytest.raises(InputError, match="MatrixMarket"):
+        svd(str(m), 2)
+
+
+def test_unknown_path_suffix_is_typed(tmp_path):
+    from repro.core import InputError
+    p = tmp_path / "a.csv"
+    p.write_text("1,2\n3,4\n")
+    with pytest.raises(InputError, match="path input must end"):
+        svd(str(p), 2)
+    # InputError subclasses ValueError: pre-existing callers keep working
+    with pytest.raises(ValueError):
+        svd(str(p), 2)
+
+
+@pytest.mark.parametrize("shape", [(0, 8), (8, 0)])
+def test_zero_dim_matrix_is_rejected(shape):
+    from repro.core import InputError
+    with pytest.raises(InputError, match="zero-row/zero-column"):
+        svd(np.zeros(shape, np.float32), 1)
+
+
+def test_overasked_rank_is_rejected_everywhere(rng, tmp_path):
+    from repro.core import InputError
+    A = make_lowrank(rng, 24, 12, [5.0, 2.0])
+    mesh = make_mesh((1,), ("data",))
+    p = tmp_path / "a.npy"
+    np.save(p, A)
+    for call in (lambda: svd(jnp.asarray(A), 13),
+                 lambda: svd(A, 13),
+                 lambda: svd(jnp.asarray(A), 13, mesh=mesh),
+                 lambda: svd(str(p), 13),
+                 lambda: svd(A, 0),
+                 lambda: svd(A, 2.5)):
+        with pytest.raises(InputError, match="k"):
+            call()
+
+
+def test_undispatchable_input_is_typed_and_a_typeerror():
+    from repro.core import InputError
+    with pytest.raises(InputError, match="dispatch"):
+        svd({"not": "a matrix"}, 2)
+    # InputError subclasses TypeError: the old contract still holds
+    with pytest.raises(TypeError, match="dispatch"):
+        svd(object(), 2)
