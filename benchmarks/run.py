@@ -14,6 +14,8 @@
                        sweep time/bytes fp32 vs bf16, all four paths
   disk_tier          — svd() on a memmap file larger than the host
                        budget (disk->host->device byte accounting)
+  serving            — SVD-as-a-service: micro-batched burst throughput
+                       vs sequential svd(), streaming under mixed load
   roofline           — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]``
@@ -36,8 +38,8 @@ def main():
 
     from benchmarks import (accuracy, block_vs_deflation, disk_tier,
                             oom_batching, precision, roofline,
-                            scaling_dense, scaling_sparse, update,
-                            warmstart)
+                            scaling_dense, scaling_sparse, serving,
+                            update, warmstart)
     suite = {
         "accuracy": accuracy.run,
         "scaling_dense": scaling_dense.run,
@@ -48,6 +50,7 @@ def main():
         "update": update.run,
         "precision": precision.run,
         "disk_tier": disk_tier.run,
+        "serving": serving.run,
         "roofline": roofline.run,
     }
     results = {}

@@ -1,0 +1,142 @@
+"""Serving-layer benchmark: micro-batched burst throughput + mixed load.
+
+Two experiments over ``repro.serving.SVDService``:
+
+* **burst** — B small same-shape jobs, solved (a) sequentially through
+  per-job ``svd()`` calls and (b) as one burst through the service's
+  micro-batcher.  Both paths are compile-warmed first, so the measured
+  gap is dispatch/batching, not jit.  The batched path must be at
+  least ``MIN_SPEEDUP``x faster end-to-end — that multiple IS the
+  reason the batcher exists, so the benchmark asserts it;
+* **mixed** — the burst again, now racing a large streamed job on the
+  same queue.  The large job must deliver at least one
+  ``PartialResult`` before it completes (streaming liveness under
+  load), and every job must end DONE.
+
+Results (timings, speedup, the queue metrics rollup) land in
+``results/serving.json`` (or ``--out``).  ``--smoke`` is the CI-sized
+run; ``python -m benchmarks.run`` includes this module as ``serving``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import SVDConfig, svd
+from repro.serving import JobStatus, SVDService
+
+#: the batched burst must beat the sequential loop by at least this
+MIN_SPEEDUP = 2.0
+
+
+def _lowrank(rng, m, n):
+    r = min(m, n)
+    U, _ = np.linalg.qr(rng.standard_normal((m, r)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, r)))
+    return ((U * np.geomspace(10.0, 1e-2, r)) @ V.T).astype(np.float32)
+
+
+def _burst(rng, b, m, n):
+    import jax.numpy as jnp
+    return [jnp.asarray(_lowrank(rng, m, n)) for _ in range(b)]
+
+
+def run(fast: bool = True):
+    b, m, n, k = (24, 48, 24, 4) if fast else (64, 128, 64, 8)
+    lm, ln, lk = (256, 96, 8) if fast else (2048, 512, 16)
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    rng = np.random.default_rng(0)
+    burst = _burst(rng, b, m, n)
+    large = _lowrank(rng, lm, ln)
+
+    print("\n== serving: micro-batched burst vs sequential svd() ==")
+    print(f"burst of {b} jobs at {m}x{n} k={k}; "
+          f"large streamed job {lm}x{ln} k={lk}")
+
+    def submit_burst(svc, mats):
+        return [svc.submit(A, k, config=cfg.replace(seed=i))
+                for i, A in enumerate(mats)]
+
+    with SVDService(max_workers=2, max_batch=b,
+                    batch_window_s=0.05) as svc:
+        # -- warm both compile paths (per-job shape AND the (b, m, n)
+        #    batched while_loop) before any clock starts
+        svd(burst[0], k, config=cfg)
+        for h in submit_burst(svc, burst):
+            assert h.wait(120.0) is JobStatus.DONE
+
+        t0 = time.perf_counter()
+        for i, A in enumerate(burst):
+            svd(A, k, config=cfg.replace(seed=i))
+        seq_wall = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        handles = submit_burst(svc, burst)
+        for h in handles:
+            assert h.wait(120.0) is JobStatus.DONE
+        batched_wall = time.perf_counter() - t0
+
+        # -- mixed load: the burst again, racing a large streamed job
+        t0 = time.perf_counter()
+        big = svc.submit(large, lk, config=cfg, stream_every=1,
+                         tag="large")
+        handles = submit_burst(svc, burst)
+        partials = sum(1 for _ in big.stream())
+        partial_before_done = big.partial_count >= 1
+        for h in handles + [big]:
+            assert h.wait(120.0) is JobStatus.DONE, \
+                f"{h.job_id} ended {h.status.value}: {h.error}"
+        mixed_wall = time.perf_counter() - t0
+        metrics = svc.metrics()
+
+    speedup = seq_wall / batched_wall
+    print(f"  sequential: {seq_wall:.3f}s "
+          f"({1e3 * seq_wall / b:.1f} ms/job)")
+    print(f"  batched   : {batched_wall:.3f}s "
+          f"({1e3 * batched_wall / b:.1f} ms/job)  "
+          f"speedup {speedup:.1f}x")
+    print(f"  mixed     : {mixed_wall:.3f}s, large job streamed "
+          f"{partials} partials")
+    assert speedup >= MIN_SPEEDUP, (
+        f"micro-batcher speedup {speedup:.2f}x below the "
+        f"{MIN_SPEEDUP}x floor")
+    assert partials >= 1 and partial_before_done, \
+        "large job completed without delivering a streamed partial"
+    print(f"  micro-batcher >= {MIN_SPEEDUP}x and streaming stayed "
+          f"live under load ✓")
+    return {
+        "burst": {"jobs": b, "m": m, "n": n, "k": k,
+                  "sequential_wall_s": round(seq_wall, 4),
+                  "batched_wall_s": round(batched_wall, 4),
+                  "speedup": round(speedup, 2)},
+        "mixed": {"large": [lm, ln, lk], "wall_s": round(mixed_wall, 4),
+                  "streamed_partials": partials},
+        "metrics": metrics,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run")
+    ap.add_argument("--full", action="store_true",
+                    help="larger burst and large-job sizes (slower)")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default results/serving.json)")
+    args = ap.parse_args()
+    result = run(fast=args.smoke or not args.full)
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results", "serving.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, default=str)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

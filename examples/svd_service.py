@@ -1,0 +1,86 @@
+"""SVD-as-a-service walkthrough: one warm process, many svd() jobs.
+
+    PYTHONPATH=src python examples/svd_service.py
+
+``repro.serving.SVDService`` turns the one-call library front door
+into a persistent serving process: submit jobs from any thread, get
+handles back immediately, and let the scheduler worry about priority,
+admission backpressure, micro-batching, and metering.  This demo walks
+the whole client surface:
+
+  1. a burst of small same-shape jobs — stacked by the micro-batcher
+     into ONE vmapped dispatch (watch ``batched_jobs`` in the metrics);
+  2. a large job with ``stream_every=1`` — leading singular triplets
+     and the subspace gap arrive every iteration, long before DONE;
+  3. a bad request (k larger than the matrix) — FAILED with the typed
+     ``InputError``, the "4xx" class; the queue keeps serving;
+  4. cancellation of a queued job;
+  5. the per-job cost records and the queue-level metrics rollup.
+
+(Serving LM *decode* from a compressed checkpoint is the other serve
+entry point: ``python -m repro.launch.serve`` — see README "Serving".)
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import InputError, SVDConfig
+from repro.serving import JobStatus, SVDService
+
+
+def lowrank(rng, m, n):
+    r = min(m, n)
+    U, _ = np.linalg.qr(rng.standard_normal((m, r)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, r)))
+    return ((U * np.geomspace(10.0, 1e-2, r)) @ V.T).astype(np.float32)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+
+    with SVDService(max_workers=2, max_batch=16) as svc:
+        # 1) a burst of small same-shape jobs: the batcher stacks these
+        burst = [svc.submit(jnp.asarray(lowrank(rng, 48, 24)), 4,
+                            config=cfg.replace(seed=i), tag="burst")
+                 for i in range(12)]
+
+        # 2) a large streamed job: partials while it runs
+        big = svc.submit(lowrank(rng, 512, 128), 8, config=cfg,
+                         stream_every=2, priority=5, tag="big")
+        print("streaming the large job:")
+        for p in big.stream():
+            print(f"  it={p.it:3d} gap={p.gap:.3e} "
+                  f"S[:4]={np.round(p.S[:4], 3)}")
+        print(f"  -> {big.wait().value}, "
+              f"{big.result().passes_over_A} passes over A")
+
+        # 3) a bad request fails typed, without hurting the queue
+        bad = svc.submit(jnp.asarray(lowrank(rng, 16, 8)), 999)
+        assert bad.wait(30.0) is JobStatus.FAILED
+        assert isinstance(bad.error, InputError)
+        print(f"bad request: {bad.error_kind} error ({bad.error})")
+
+        # 4) cancel something still queued
+        victim = svc.submit(jnp.asarray(lowrank(rng, 48, 24)), 4,
+                            config=cfg.replace(seed=99), priority=-10)
+        victim.cancel()
+        assert victim.wait(30.0) is JobStatus.CANCELLED
+
+        for h in burst:
+            assert h.wait(60.0) is JobStatus.DONE
+        print(f"burst of {len(burst)} small jobs: all "
+              f"{burst[0].wait().value}")
+
+        # 5) the bill: per-job cost records + the queue rollup
+        rec = next(r for r in svc.meter.records
+                   if r.job_id == burst[0].job_id)
+        print("\none burst job's cost record:")
+        print(json.dumps(rec.to_dict(), indent=2, default=str))
+        print("\nqueue metrics:")
+        print(json.dumps(svc.metrics(), indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -365,6 +365,12 @@ class SVDResult(NamedTuple):
     #                          "events": [...]} from core/faults.py::
     #                          FaultTelemetry (block driver only; None
     #                          on the deflation engines)
+    wall_time_s: Any = None  # end-to-end wall-clock seconds for the
+    #                          svd() call (dispatch + solve + extract),
+    #                          stamped once by the front door so every
+    #                          backend reports it and metering layers
+    #                          (repro.serving) never clock the driver
+    #                          from outside
 
 
 def key_to_seed(key) -> int:

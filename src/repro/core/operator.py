@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import functools
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -167,6 +168,11 @@ def dense_block_step_fn(sweep_dtype):
 # Protocol / base class
 # ---------------------------------------------------------------------------
 
+#: serializes first-touch creation of the per-operator solve lock for
+#: duck-typed operators that never ran ``LinearOperator.__init__``
+_SOLVE_GUARD_INIT = threading.Lock()
+
+
 class LinearOperator:
     """Base class + protocol for the shared block-iteration driver.
 
@@ -192,9 +198,50 @@ class LinearOperator:
         self._passes = 0
         self._telemetry = None
         self._retry_policy = None
+        self._solve_lock = threading.Lock()
 
     def _count(self, n):
         self._passes += n
+
+    # -- exclusive-solve guard (one driver loop per operator instance) ------
+
+    def acquire_solve(self):
+        """Claim this operator for one driver loop.
+
+        The pass/byte counters and the per-solve ``set_resilience``
+        telemetry install are instance state: two solves interleaving on
+        the SAME operator would silently cross-wire each other's
+        accounting and fault records.  A serving process (many jobs, one
+        process — ``repro.serving``) must give each job its own operator;
+        reusing a live one is a caller error, so it raises the typed 4xx
+        ``InputError`` instead of corrupting both jobs.  Non-blocking by
+        design: queueing on a busy operator would deadlock a runner pool.
+        """
+        # lazy init: duck-typed subclasses may never call super().__init__
+        lock = self.__dict__.get("_solve_lock")
+        if lock is None:
+            with _SOLVE_GUARD_INIT:
+                lock = self.__dict__.setdefault("_solve_lock",
+                                                threading.Lock())
+        if not lock.acquire(blocking=False):
+            from repro.core.errors import InputError
+            raise InputError(
+                f"operator {self.fingerprint!r} is already running a "
+                f"solve: LinearOperator instances hold per-solve mutable "
+                f"state (pass/byte counters, fault telemetry) and cannot "
+                f"be shared by concurrent svd() calls — build one "
+                f"operator per job (repro.serving does this for you)")
+
+    def release_solve(self):
+        """Release the exclusive-solve claim (idempotent: releasing an
+        unclaimed operator is a no-op so driver cleanup paths can't
+        die on double release)."""
+        lock = self.__dict__.get("_solve_lock")
+        if lock is not None and lock.locked():
+            try:
+                lock.release()
+            except RuntimeError:  # pragma: no cover - released elsewhere
+                pass
 
     @property
     def passes(self):

@@ -58,6 +58,7 @@ process); see the README migration table.
 from __future__ import annotations
 
 import math
+import time
 import warnings
 
 import jax
@@ -67,7 +68,8 @@ import numpy as np
 from repro.core.config import (SolverState, SVDConfig,  # noqa: F401
                                SVDResult, key_to_seed, seed_to_key)
 from repro.core.errors import (FaultExhaustedError, InputError,
-                               NumericalHealthError, is_oom_error)
+                               NumericalHealthError, SVDError,
+                               is_oom_error)
 from repro.core.faults import (FaultTelemetry, RetryPolicy, fault_hook,
                                maybe_corrupt)
 from repro.core.operator import (DenseOperator, HostBlockedOperator,
@@ -433,7 +435,14 @@ def _drive(op: LinearOperator, k: int, cfg: SVDConfig, warm, mgr,
             last_saved = state.it
         fault_hook("kill", telemetry)   # chaos: die AFTER the checkpoint
         if cfg.on_iteration is not None:
-            cfg.on_iteration(state)
+            # a hook marked `_wants_operator` (the serving runner's
+            # partial-result streamer) also receives the live operator so
+            # it can run an extra Rayleigh–Ritz extraction mid-solve;
+            # plain hooks keep the one-argument trace signature
+            if getattr(cfg.on_iteration, "_wants_operator", False):
+                cfg.on_iteration(state, op)
+            else:
+                cfg.on_iteration(state)
     if mgr is not None and last_saved != state.it:
         _save_state(mgr, op, state)                     # final state
     return finalize(op, state, cfg)
@@ -497,28 +506,51 @@ def _run_block(op: LinearOperator, k: int, cfg: SVDConfig, warm=None):
         from repro.checkpoint import CheckpointManager
         mgr = CheckpointManager(cfg.checkpoint_dir)
     carried = None
-    while True:
-        op.reset_counters()
-        op.set_resilience(telemetry, policy)
-        cell: dict = {"state": None}
-        try:
-            res = _drive(op, k, cfg, warm, mgr, telemetry, carried, cell)
-            return res._replace(faults=telemetry.snapshot())
-        except Exception as e:
-            if not (cfg.demote_on_oom and is_oom_error(e)):
-                raise
-            new_op = op.demote(cfg)
-            if new_op is None:
-                raise FaultExhaustedError(
-                    f"device OOM on the {op.backend!r} backend with no "
-                    f"lower tier to demote to; shrink the problem, lower "
-                    f"n_blocks/host_budget_bytes pressure, or set "
-                    f"demote_on_oom=False to see the raw error") from e
-            carried = _carry_state(cell["state"], op, telemetry)
-            telemetry.record(
-                "device_oom", "demote", frm=op.backend, to=new_op.backend,
-                it=0 if carried is None else int(carried.it))
-            op, warm = new_op, None     # carried iterate supersedes warm
+    # exclusive use of the operator for the whole solve (including
+    # across tier demotions): the per-solve telemetry/retry install and
+    # the pass/byte counters are per-operator mutable state, so two
+    # concurrent solves sharing one instance would cross-wire their
+    # accounting — a serving process fails the second job with a typed
+    # error instead (see repro.serving)
+    op.acquire_solve()
+    try:
+        while True:
+            op.reset_counters()
+            op.set_resilience(telemetry, policy)
+            cell: dict = {"state": None}
+            try:
+                res = _drive(op, k, cfg, warm, mgr, telemetry, carried,
+                             cell)
+                return res._replace(faults=telemetry.snapshot())
+            except Exception as e:
+                if not (cfg.demote_on_oom and is_oom_error(e)):
+                    if isinstance(e, SVDError):
+                        # failed solves carry their fault/recovery
+                        # telemetry too, so a serving layer can report
+                        # WHY a job died (retries burned, demotions
+                        # taken) without re-running it
+                        e.faults = telemetry.snapshot()
+                    raise
+                new_op = op.demote(cfg)
+                if new_op is None:
+                    err = FaultExhaustedError(
+                        f"device OOM on the {op.backend!r} backend with "
+                        f"no lower tier to demote to; shrink the "
+                        f"problem, lower n_blocks/host_budget_bytes "
+                        f"pressure, or set demote_on_oom=False to see "
+                        f"the raw error")
+                    err.faults = telemetry.snapshot()
+                    raise err from e
+                carried = _carry_state(cell["state"], op, telemetry)
+                telemetry.record(
+                    "device_oom", "demote", frm=op.backend,
+                    to=new_op.backend,
+                    it=0 if carried is None else int(carried.it))
+                new_op.acquire_solve()
+                op.release_solve()
+                op, warm = new_op, None  # carried iterate supersedes warm
+    finally:
+        op.release_solve()
 
 
 def _deflation_converged(iters, cfg: SVDConfig) -> bool:
@@ -855,8 +887,21 @@ def svd(A, k: int, *, mesh=None, axes=("data",),
                   mesh=mesh)
 
     Returns an ``SVDResult`` (U, S, V, iters, passes_over_A,
-    bytes_per_pass, converged, backend, bytes_moved).
+    bytes_per_pass, converged, backend, bytes_moved, faults,
+    wall_time_s).
     """
+    t0 = time.perf_counter()
+    res = _dispatch(A, k, mesh=mesh, axes=axes, config=config,
+                    _warm=_warm, **overrides)
+    # one stamp at the front door covers every backend: metering layers
+    # (repro.serving) read the wall clock off the result instead of
+    # timing the driver from outside
+    return res._replace(wall_time_s=time.perf_counter() - t0)
+
+
+def _dispatch(A, k: int, *, mesh=None, axes=("data",),
+              config: SVDConfig | None = None, _warm=None,
+              **overrides) -> SVDResult:
     import os
     cfg = config if config is not None else SVDConfig()
     if overrides:

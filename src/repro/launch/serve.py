@@ -5,6 +5,13 @@
 
 Same mesh policy as launch/train.py.  This is the production decode path
 the decode_32k / long_500k dry-run cells lower.
+
+This module serves LM TOKEN GENERATION (the model half of the repo) —
+not to be confused with ``repro.serving``, the job-queue service for
+the decompositions themselves (``python -m repro.serving --smoke``):
+that one admits many concurrent ``svd()`` jobs with micro-batching,
+streamed partial results, and per-job cost metering.  The README's
+"Serving" section names both entry points.
 """
 from __future__ import annotations
 

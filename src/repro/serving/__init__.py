@@ -1,0 +1,34 @@
+"""SVD-as-a-service: a job-queue serving layer over ``repro.core.svd``.
+
+This package serves DECOMPOSITION jobs — many concurrent ``svd()``
+requests through one persistent, compile-cache-warm process:
+
+* ``service.SVDService`` — the front door: ``submit() -> JobHandle``,
+  priority + byte-budget admission, a worker pool, metering;
+* ``job`` — ``JobSpec``/``JobStatus`` lifecycle, streamed
+  ``PartialResult``s, the typed 4xx/5xx failure boundary;
+* ``queue`` — the asyncio admission heap + byte-budget backpressure;
+* ``batcher`` — small same-shape jobs stacked into one vmapped solve;
+* ``runner`` — per-job execution on the normal driver, with streaming,
+  cancellation, deadlines, and per-job checkpoints;
+* ``metering`` — per-job cost records off the engine's own accounting.
+
+Not to be confused with ``repro.launch.serve`` — the LM **decode**
+serving CLI for the model half of the repo.  That one serves token
+generation from a (possibly SVD-compressed) checkpoint; THIS one
+serves the factorizations themselves.  The README's "Serving" section
+names both entry points.
+
+Demo/smoke CLI: ``python -m repro.serving --smoke``.
+"""
+from repro.serving.job import (DeadlineExceeded, Job, JobCancelled,
+                               JobSpec, JobStatus, PartialResult,
+                               classify_error)
+from repro.serving.metering import CostRecord, Meter
+from repro.serving.service import JobHandle, SVDService
+
+__all__ = [
+    "SVDService", "JobHandle", "JobSpec", "JobStatus", "Job",
+    "PartialResult", "JobCancelled", "DeadlineExceeded",
+    "classify_error", "CostRecord", "Meter",
+]

@@ -97,11 +97,26 @@ def test_svdconfig_frozen_and_hashable():
 def test_svdresult_field_snapshot():
     assert SVDResult._fields == ("U", "S", "V", "iters", "passes_over_A",
                                  "bytes_per_pass", "converged", "backend",
-                                 "bytes_moved", "faults")
+                                 "bytes_moved", "faults", "wall_time_s")
     # trailing fields are defaulted so legacy 8-positional construction
     # keeps working
     assert SVDResult._field_defaults == {"bytes_moved": None,
-                                         "faults": None}
+                                         "faults": None,
+                                         "wall_time_s": None}
+
+
+def test_svd_stamps_wall_time_on_every_path(rng):
+    """The front door stamps wall_time_s once for ALL backends (and the
+    deflation engines), so metering never clocks the driver outside."""
+    import jax.numpy as jnp
+    import numpy as np
+    A = np.asarray(rng.standard_normal((40, 24)), np.float32)
+    for inp, kw in [(jnp.asarray(A), {}),            # dense block
+                    (A, {"n_blocks": 2}),            # hostblocked block
+                    (jnp.asarray(A), {"method": "gram"})]:  # deflation
+        res = core.svd(inp, 3, eps=1e-6, max_iters=50, **kw)
+        assert isinstance(res.wall_time_s, float)
+        assert res.wall_time_s > 0.0
 
 
 @pytest.mark.parametrize("bad", [

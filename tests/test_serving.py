@@ -1,0 +1,367 @@
+"""Service-level contracts of repro.serving: the job lifecycle state
+machine, priority + byte-budget admission, cancellation and deadlines,
+the typed 4xx/5xx failure split (with fault telemetry on failed jobs),
+streamed partial results, and per-job cost metering — all through the
+public SVDService surface, no asyncio required of the client."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import SVDConfig, svd  # noqa: E402
+from repro.core.errors import InputError, SVDError  # noqa: E402
+from repro.serving import (DeadlineExceeded, Job, JobCancelled,  # noqa: E402
+                           JobSpec, JobStatus, SVDService, classify_error)
+from repro.serving.job import VALID_TRANSITIONS  # noqa: E402
+from repro.serving.queue import estimate_cost_bytes  # noqa: E402
+
+from conftest import make_lowrank  # noqa: E402
+
+K = 4
+SPECTRUM = np.geomspace(10.0, 1e-2, 24)
+
+
+def small(rng, seed=0):
+    return jnp.asarray(make_lowrank(rng, 48, 24, SPECTRUM), jnp.float32)
+
+
+def slow_cfg(**kw):
+    """A config that needs many block iterations (clustered tail +
+    tiny eps) so mid-run events (partials, cancels) are observable."""
+    return SVDConfig(eps=1e-12, max_iters=400, **kw)
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+def test_status_machine_legal_path():
+    job = Job(spec=JobSpec(input=np.zeros((4, 4)), k=1))
+    assert job.status is JobStatus.QUEUED
+    job.mark_admitted()
+    job.mark_running()
+    job.mark_done(result="r")
+    assert job.status is JobStatus.DONE
+    assert job.wait(0.1) is JobStatus.DONE
+
+
+@pytest.mark.parametrize("terminal", [JobStatus.DONE, JobStatus.FAILED,
+                                      JobStatus.CANCELLED])
+def test_terminal_states_are_absorbing(terminal):
+    assert VALID_TRANSITIONS[terminal] == ()
+
+
+def test_illegal_transition_is_loud():
+    job = Job(spec=JobSpec(input=np.zeros((4, 4)), k=1))
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        job.mark_done(result="r")      # QUEUED -> DONE skips admission
+    job.mark_admitted()
+    job.mark_running()
+    job.mark_cancelled()
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        job.mark_done(result="r")      # cancelled is terminal
+
+
+def test_classify_error_is_the_typed_split():
+    assert classify_error(InputError("bad k")) == "input"
+    assert classify_error(SVDError("infra")) == "internal"
+    assert classify_error(DeadlineExceeded("late")) == "internal"
+    assert classify_error(RuntimeError("boom")) == "internal"
+
+
+# ---------------------------------------------------------------------------
+# admission: priority order + byte-budget backpressure
+# ---------------------------------------------------------------------------
+
+def _blocking_spec(rng, release: threading.Event, started: threading.Event):
+    """A job whose solve parks on `release` at its first iteration, so
+    the test controls exactly when its budget frees up."""
+    def hold(state):
+        started.set()
+        release.wait(30.0)
+    A = small(rng)
+    return JobSpec(input=A, k=K,
+                   config=SVDConfig(eps=1e-8, max_iters=60,
+                                    on_iteration=hold))
+
+
+def test_priority_orders_admission_under_backpressure(rng):
+    release, started = threading.Event(), threading.Event()
+    blocker = _blocking_spec(rng, release, started)
+    # budget sized for ONE job: everything else waits in the heap,
+    # where priority (not submission order) decides who goes next
+    budget = estimate_cost_bytes(blocker)
+    with SVDService(max_workers=1, byte_budget=budget) as svc:
+        hb = svc.submit(spec=blocker)
+        assert started.wait(30.0), "blocker never started"
+        lo = svc.submit(small(rng, 1), K, priority=0, tag="lo")
+        hi = svc.submit(small(rng, 2), K, priority=5, tag="hi")
+        time.sleep(0.05)               # both must be heaped before release
+        release.set()
+        assert hb.wait(30.0) is JobStatus.DONE
+        assert lo.wait(30.0) is JobStatus.DONE
+        assert hi.wait(30.0) is JobStatus.DONE
+        assert svc._jobs[hi.job_id].admitted_at < \
+            svc._jobs[lo.job_id].admitted_at, \
+            "higher priority job must be admitted first"
+
+
+def test_byte_budget_serializes_admission(rng):
+    specs = [JobSpec(input=small(rng, s), k=K,
+                     config=SVDConfig(eps=1e-8, max_iters=100))
+             for s in range(3)]
+    budget = estimate_cost_bytes(specs[0])   # exactly one job at a time
+    peak = 0
+    with SVDService(max_workers=2, byte_budget=budget) as svc:
+        handles = [svc.submit(spec=s) for s in specs]
+        jobs = [svc._jobs[h.job_id] for h in handles]
+        # poll the live-job gauge while the queue drains
+        deadline = time.time() + 60.0
+        while time.time() < deadline:
+            live = sum(j.status in (JobStatus.ADMITTED, JobStatus.RUNNING,
+                                    JobStatus.STREAMING) for j in jobs)
+            peak = max(peak, live)
+            if all(j.status.terminal for j in jobs):
+                break
+            time.sleep(0.001)
+        for h in handles:
+            assert h.wait(30.0) is JobStatus.DONE
+    assert peak <= 1, \
+        f"byte budget for one job admitted {peak} jobs concurrently"
+
+
+def test_over_budget_job_is_clamped_not_deadlocked(rng):
+    # a job whose estimate exceeds the whole budget must still run
+    A = small(rng)
+    with SVDService(max_workers=1, byte_budget=1024) as svc:
+        h = svc.submit(A, K, eps=1e-8, max_iters=100)
+        assert h.wait(30.0) is JobStatus.DONE
+
+
+# ---------------------------------------------------------------------------
+# cancellation + deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_job(rng):
+    release, started = threading.Event(), threading.Event()
+    blocker = _blocking_spec(rng, release, started)
+    budget = estimate_cost_bytes(blocker)
+    try:
+        with SVDService(max_workers=1, byte_budget=budget) as svc:
+            hb = svc.submit(spec=blocker)
+            assert started.wait(30.0)
+            victim = svc.submit(small(rng, 1), K, tag="victim")
+            assert victim.cancel()
+            release.set()
+            assert victim.wait(30.0) is JobStatus.CANCELLED
+            assert hb.wait(30.0) is JobStatus.DONE
+            with pytest.raises(JobCancelled):
+                victim.result(1.0)
+    finally:
+        release.set()
+
+
+def test_cancel_running_streamed_job(rng):
+    A = jnp.asarray(make_lowrank(rng, 64, 32, np.geomspace(10, 0.1, 32)),
+                    jnp.float32)
+    gate = threading.Event()
+
+    def pace(state):               # park the solve until the test is ready
+        if state.it >= 3:
+            gate.wait(30.0)
+
+    try:
+        with SVDService(max_workers=1) as svc:
+            h = svc.submit(A, K, config=slow_cfg(on_iteration=pace),
+                           stream_every=1)
+            p = next(iter(h.stream(timeout=30.0)))
+            assert p.it >= 1
+            assert not h.status.terminal   # solver is parked at it >= 3
+            assert h.cancel()
+            gate.set()                     # next iteration sees the cancel
+            assert h.wait(30.0) is JobStatus.CANCELLED
+            with pytest.raises(JobCancelled):
+                h.result(1.0)
+    finally:
+        gate.set()
+
+
+def test_deadline_exceeded_while_queued(rng):
+    release, started = threading.Event(), threading.Event()
+    blocker = _blocking_spec(rng, release, started)
+    budget = estimate_cost_bytes(blocker)
+    try:
+        with SVDService(max_workers=1, byte_budget=budget) as svc:
+            hb = svc.submit(spec=blocker)
+            assert started.wait(30.0)
+            late = svc.submit(small(rng, 1), K, deadline_s=0.01)
+            time.sleep(0.05)           # let the deadline lapse in-queue
+            release.set()
+            assert late.wait(30.0) is JobStatus.FAILED
+            assert isinstance(late.error, DeadlineExceeded)
+            assert late.error_kind == "internal"
+            assert hb.wait(30.0) is JobStatus.DONE
+    finally:
+        release.set()
+
+
+# ---------------------------------------------------------------------------
+# the typed 4xx/5xx failure boundary + fault telemetry
+# ---------------------------------------------------------------------------
+
+def test_input_error_is_4xx_and_queue_survives(rng):
+    A = small(rng)
+    with SVDService(max_workers=1) as svc:
+        bad = svc.submit(A, 999)               # k > min(m, n): client bug
+        good = svc.submit(small(rng, 1), K, eps=1e-8)
+        assert bad.wait(30.0) is JobStatus.FAILED
+        assert isinstance(bad.error, InputError)
+        assert bad.error_kind == "input"
+        # the failure did not poison the queue
+        assert good.wait(30.0) is JobStatus.DONE
+        with pytest.raises(InputError):
+            bad.result(1.0)
+
+
+def test_numeric_fault_is_5xx_with_telemetry_and_queue_survives(rng):
+    A = np.asarray(make_lowrank(rng, 80, 30, np.geomspace(10, 0.1, 30)),
+                   np.float32)
+    A[3, 7] = np.nan                   # poisoned input: health guard trips
+    with SVDService(max_workers=1) as svc:
+        # non-batchable (hostblocked via numpy + big enough? use
+        # stream_every to force the sequential runner)
+        bad = svc.submit(A, K, stream_every=1,
+                         config=SVDConfig(eps=1e-8, max_iters=50,
+                                          health_retries=1))
+        good = svc.submit(small(rng, 1), K, eps=1e-8)
+        assert bad.wait(60.0) is JobStatus.FAILED
+        assert isinstance(bad.error, SVDError)
+        assert not isinstance(bad.error, InputError)
+        assert bad.error_kind == "internal"
+        # the engine's FaultTelemetry snapshot rides the failed job
+        assert bad.faults is not None
+        assert any(c.startswith("health.")
+                   for c in bad.faults["counters"]), bad.faults
+        assert good.wait(30.0) is JobStatus.DONE
+
+
+# ---------------------------------------------------------------------------
+# streamed partial results
+# ---------------------------------------------------------------------------
+
+def test_streaming_delivers_partials_before_done(rng):
+    # gradual spectrum: tens of iterations, so it=1 partials land long
+    # before convergence; a pace hook parks the solve at it=3 until the
+    # subscriber has CONSUMED a partial, making "received while still
+    # running" deterministic rather than a race
+    A = jnp.asarray(make_lowrank(rng, 64, 32, np.geomspace(10, 0.1, 32)),
+                    jnp.float32)
+    cfg = SVDConfig(eps=1e-8, max_iters=200)
+    ref = svd(A, K, config=cfg)
+    gate = threading.Event()
+
+    def pace(state):
+        if state.it >= 3:
+            gate.wait(30.0)
+
+    try:
+        with SVDService(max_workers=1) as svc:
+            h = svc.submit(A, K, config=cfg.replace(on_iteration=pace),
+                           stream_every=1)
+            partials = []
+            stream = h.stream(timeout=60.0)
+            first = next(iter(stream))
+            assert not h.status.terminal, \
+                "first partial must arrive while the job is still running"
+            gate.set()
+            partials = [first, *stream]
+            assert h.wait(30.0) is JobStatus.DONE
+            res = h.result()
+    finally:
+        gate.set()
+    assert len(partials) >= 2
+    last = partials[-1]
+    assert first.it < int(np.asarray(ref.iters)[0])
+    assert first.S.shape == (K,) and first.U.shape == (64, K) \
+        and first.V.shape == (32, K)
+    assert first.gap is None or first.gap >= 0
+    # the stream converges onto the final answer (same trajectory as
+    # the hook-free reference — hooks never change the math)
+    assert np.allclose(last.S, np.asarray(ref.S), rtol=1e-3)
+    assert np.allclose(np.asarray(res.S), np.asarray(ref.S))
+    # partial extractions are metered, never billed to the solver
+    assert int(res.passes_over_A) == int(ref.passes_over_A)
+    assert h.partial_count == len(partials)
+
+
+def test_deadline_exceeded_mid_run(rng):
+    A = jnp.asarray(make_lowrank(rng, 64, 32, np.geomspace(10, 0.1, 32)),
+                    jnp.float32)
+
+    def stall(state):              # make one iteration outlast the budget
+        if state.it == 1:
+            time.sleep(0.3)
+
+    with SVDService(max_workers=1) as svc:
+        h = svc.submit(A, K, config=slow_cfg(on_iteration=stall),
+                       deadline_s=0.15, stream_every=1)
+        assert h.wait(60.0) is JobStatus.FAILED
+        assert isinstance(h.error, DeadlineExceeded)
+        assert h.error_kind == "internal"
+
+
+def test_streamed_wide_input_orients_partials(rng):
+    Aw = jnp.asarray(make_lowrank(rng, 24, 48, SPECTRUM), jnp.float32)
+    with SVDService(max_workers=1) as svc:
+        h = svc.submit(Aw, K, config=slow_cfg(), stream_every=1)
+        p = next(iter(h.stream(timeout=60.0)))
+        h.result(60.0)
+    assert p.U.shape == (24, K) and p.V.shape == (48, K)
+
+
+# ---------------------------------------------------------------------------
+# metering
+# ---------------------------------------------------------------------------
+
+def test_cost_records_transcribe_engine_accounting(rng):
+    A = small(rng)
+    ref = svd(A, K, eps=1e-8)
+    with SVDService(max_workers=1) as svc:
+        h = svc.submit(A, K, eps=1e-8, tag="bill-me")
+        res = h.result(30.0)
+        recs = {r.job_id: r for r in svc.meter.records}
+        m = svc.metrics()
+    rec = recs[h.job_id]
+    assert rec.tag == "bill-me" and rec.status == "done"
+    assert rec.passes_over_A == int(res.passes_over_A) \
+        == int(ref.passes_over_A)
+    assert rec.bytes_per_pass == int(res.bytes_per_pass)
+    assert rec.wall_time_s == res.wall_time_s and rec.wall_time_s > 0
+    assert rec.shape == (48, 24) and rec.k == K
+    assert rec.queue_wait_s >= 0 and rec.run_wall_s > 0
+    assert m["jobs"] == 1 and m["by_status"] == {"done": 1}
+    assert m["total_passes_over_A"] == rec.passes_over_A
+
+
+def test_metrics_rollup_counts_every_terminal_state(rng):
+    with SVDService(max_workers=2) as svc:
+        ok = svc.submit(small(rng), K, eps=1e-8)
+        bad = svc.submit(small(rng, 1), 999)
+        ok.wait(30.0), bad.wait(30.0)
+        m = svc.metrics()
+    assert m["by_status"].get("done") == 1
+    assert m["by_status"].get("failed") == 1
+    assert m["jobs"] == 2
+
+
+def test_meter_json_roundtrips(rng):
+    import json
+    with SVDService(max_workers=1) as svc:
+        svc.submit(small(rng), K, eps=1e-8).result(30.0)
+        blob = svc.meter.to_json()
+    parsed = json.loads(blob)
+    assert parsed["metrics"]["jobs"] == len(parsed["records"]) == 1

@@ -1,0 +1,250 @@
+"""The micro-batcher's contracts (see batcher.py's module docstring):
+
+* differential — a vmapped batch lane agrees with a standalone per-job
+  ``svd()`` at the same config, against BOTH per-job baselines (dense
+  for jax-array inputs, hostblocked for numpy inputs);
+* isolation — a poisoned lane (NaN input) fails ALONE with the
+  engine's typed ``NumericalHealthError``; its batchmates complete,
+  both at the solve_batch level and through the full service;
+* honest accounting — per-lane passes/bytes follow the engine's
+  counting convention against the lane's own iteration count;
+* routing — stragglers fall back to the sequential runner
+  (``batched=False`` in the cost record) and ``max_batch`` splits a
+  burst into dispatches no larger than the cap.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_lowrank
+
+from repro.core import NumericalHealthError, svd
+from repro.core.svd import _dispatch
+from repro.serving import JobSpec, JobStatus, SVDService
+from repro.serving.batcher import (MAX_BATCH_ELEMS, batch_key, batchable,
+                                   solve_batch)
+from repro.core.config import SVDConfig
+
+M, N, K = 48, 24, 4
+SPECTRUM = np.geomspace(10.0, 1e-2, N)
+
+
+def _spec(rng, *, seed=0, as_numpy=False, warmup_q=0, nan=False,
+          **cfg_kw):
+    A = make_lowrank(rng, M, N, SPECTRUM)
+    if nan:
+        A = A.copy()
+        A[3, 5] = np.nan
+    cfg_kw.setdefault("eps", 1e-8)
+    cfg = SVDConfig(max_iters=300, seed=seed,
+                    warmup_q=warmup_q, **cfg_kw)
+    X = A if as_numpy else jnp.asarray(A, jnp.float32)
+    return JobSpec(input=X, k=K, config=cfg)
+
+
+def _aligned(V, Vref, atol=1e-3):
+    """Subspaces equal up to rotation: svals of V^T Vref are all ~1."""
+    s = np.linalg.svd(np.asarray(V).T @ np.asarray(Vref),
+                      compute_uv=False)
+    return np.allclose(s, 1.0, atol=atol)
+
+
+# -- batchable / batch_key routing ----------------------------------------
+
+
+def test_batchable_accepts_small_dense_block_jobs(rng):
+    assert batchable(_spec(rng))
+    assert batchable(_spec(rng, as_numpy=True, warmup_q=1))
+
+
+@pytest.mark.parametrize("mut", [
+    dict(method="gram"),
+    dict(on_iteration=lambda s: None),
+    dict(checkpoint_dir="/tmp/nope"),
+    dict(force_iters=True),
+])
+def test_batchable_rejects_scalar_driver_plumbing(rng, mut):
+    assert not batchable(_spec(rng, **mut))
+
+
+def test_batchable_rejects_streaming_memmap_and_big(rng, tmp_path):
+    sub = dataclasses.replace
+    assert not batchable(sub(_spec(rng), stream_every=1))
+    p = tmp_path / "a.npy"
+    A = make_lowrank(rng, M, N, SPECTRUM)
+    np.save(p, A)
+    mm = np.load(p, mmap_mode="r")
+    assert not batchable(sub(_spec(rng), input=mm))
+    big = np.zeros((MAX_BATCH_ELEMS // 8, 16), np.float32)
+    assert not batchable(sub(_spec(rng), input=big))
+    assert not batchable(sub(_spec(rng), k=N + 1))
+
+
+def test_batch_key_groups_by_shape_and_solver_knobs(rng):
+    a, b = _spec(rng, seed=0), _spec(rng, seed=7)
+    assert batch_key(a) == batch_key(b)  # seed is per-lane, not a key
+    assert batch_key(a) != batch_key(_spec(rng, warmup_q=1))
+    assert batch_key(a) != batch_key(_spec(rng, eps=1e-4))
+    assert batch_key(a) != batch_key(dataclasses.replace(a, k=K + 1))
+
+
+# -- differential contracts -----------------------------------------------
+
+
+def _check_lanes_match(specs, lanes):
+    for s, (res, err) in zip(specs, lanes):
+        assert err is None
+        ref = _dispatch(s.input, s.k, config=s.resolved_config())
+        np.testing.assert_allclose(res.S, ref.S, rtol=1e-4)
+        assert _aligned(res.V, ref.V)
+        assert _aligned(res.U, ref.U)
+        assert res.converged
+        # lanes iterate together but stop per-lane: each lane's count
+        # must match its own standalone trajectory
+        assert abs(int(res.iters[0]) - int(ref.iters[0])) <= 1
+        return ref  # caller may inspect one baseline
+
+
+def test_batch_matches_per_job_dense_baseline(rng):
+    specs = [_spec(rng, seed=i) for i in range(5)]
+    lanes = solve_batch(specs)
+    ref = _check_lanes_match(specs, lanes)
+    assert ref.backend == "dense"
+
+
+def test_batch_matches_per_job_hostblocked_baseline(rng):
+    # numpy inputs route the standalone baseline through the
+    # host-blocked backend — the batch must agree with THAT too
+    specs = [_spec(rng, seed=i, as_numpy=True, n_blocks=2)
+             for i in range(4)]
+    ref = _dispatch(specs[0].input, K, config=specs[0].resolved_config())
+    assert ref.backend == "hostblocked"
+    for s, (res, err) in zip(specs, solve_batch(specs)):
+        assert err is None
+        per_job = _dispatch(s.input, s.k, config=s.resolved_config())
+        np.testing.assert_allclose(res.S, per_job.S, rtol=1e-4)
+        assert _aligned(res.V, per_job.V)
+
+
+def test_batch_with_warmup_matches_per_job(rng):
+    specs = [_spec(rng, seed=i, warmup_q=1, oversample=4)
+             for i in range(3)]
+    _check_lanes_match(specs, solve_batch(specs))
+
+
+def test_wide_inputs_stack_transposed_and_swap_factors(rng):
+    A = make_lowrank(rng, N, M, SPECTRUM)            # 24 x 48: wide
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    specs = [JobSpec(input=jnp.asarray(A, jnp.float32), k=K, config=cfg)]
+    (res, err), = solve_batch(specs)
+    assert err is None
+    ref = _dispatch(specs[0].input, K, config=cfg)
+    assert res.U.shape == (N, K) and res.V.shape == (M, K)
+    np.testing.assert_allclose(res.S, ref.S, rtol=1e-4)
+    assert _aligned(res.U, ref.U) and _aligned(res.V, ref.V)
+
+
+# -- isolation: a poisoned lane fails alone -------------------------------
+
+
+def test_nan_lane_fails_alone_in_solve_batch(rng):
+    specs = [_spec(rng, seed=0), _spec(rng, seed=1, nan=True),
+             _spec(rng, seed=2)]
+    lanes = solve_batch(specs)
+    res0, err0 = lanes[0]
+    resN, errN = lanes[1]
+    res2, err2 = lanes[2]
+    assert err0 is None and err2 is None
+    assert resN is None
+    assert isinstance(errN, NumericalHealthError)
+    assert errN.kind == "nonfinite"
+    for res, s in ((res0, specs[0]), (res2, specs[2])):
+        ref = _dispatch(s.input, s.k, config=s.resolved_config())
+        np.testing.assert_allclose(res.S, ref.S, rtol=1e-4)
+        assert res.converged
+
+
+def test_nan_lane_fails_alone_through_the_service(rng):
+    good = [make_lowrank(rng, M, N, SPECTRUM) for _ in range(3)]
+    bad = good[0].copy()
+    bad[0, 0] = np.nan
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    with SVDService(max_workers=1, max_batch=4,
+                    batch_window_s=0.25) as svc:
+        hs = [svc.submit(jnp.asarray(A, jnp.float32), K,
+                         config=cfg.replace(seed=i))
+              for i, A in enumerate(good)]
+        hbad = svc.submit(jnp.asarray(bad, jnp.float32), K,
+                          config=cfg.replace(seed=9))
+        for h in hs:
+            assert h.wait(60.0) is JobStatus.DONE
+        assert hbad.wait(60.0) is JobStatus.FAILED
+        assert hbad.error_kind == "internal"       # the 5xx class
+        assert isinstance(hbad.error, NumericalHealthError)
+        recs = {r.job_id: r for r in svc.meter.records}
+    # all four rode the same dispatch — including the failed lane
+    assert all(recs[h.job_id].batched for h in hs + [hbad])
+    assert recs[hbad.job_id].batch_size == 4
+
+
+# -- accounting -----------------------------------------------------------
+
+
+def test_batch_lane_accounting_follows_engine_convention(rng):
+    specs = [_spec(rng, seed=i) for i in range(2)]
+    for res, err in solve_batch(specs):
+        assert err is None
+        it = int(res.iters[0])
+        assert res.passes_over_A == 2 * it + 1      # cold start
+        assert res.bytes_per_pass == M * N * 4
+        assert res.bytes_moved == {
+            "device": res.passes_over_A * res.bytes_per_pass}
+    (res, _), = solve_batch([_spec(rng, warmup_q=2)])
+    it = int(res.iters[0])
+    assert res.passes_over_A == (2 * 2 + 1) + 2 * it + 1
+
+
+# -- service routing: stragglers and max_batch splits ---------------------
+
+
+def test_straggler_falls_back_to_sequential_runner(rng):
+    with SVDService(max_workers=1, max_batch=8,
+                    batch_window_s=0.05) as svc:
+        h = svc.submit(jnp.asarray(make_lowrank(rng, M, N, SPECTRUM),
+                                   jnp.float32), K,
+                       config=SVDConfig(eps=1e-8, max_iters=300))
+        assert h.wait(60.0) is JobStatus.DONE
+        rec, = [r for r in svc.meter.records if r.job_id == h.job_id]
+    assert rec.batched is False and rec.batch_size == 1
+    assert rec.backend == "dense"
+
+
+def test_max_batch_splits_burst_into_capped_dispatches(rng):
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    with SVDService(max_workers=1, max_batch=4,
+                    batch_window_s=0.25) as svc:
+        hs = [svc.submit(jnp.asarray(make_lowrank(rng, M, N, SPECTRUM),
+                                     jnp.float32), K,
+                         config=cfg.replace(seed=i))
+              for i in range(5)]
+        for h in hs:
+            assert h.wait(60.0) is JobStatus.DONE
+        sizes = sorted(r.batch_size for r in svc.meter.records)
+    assert sizes == [1, 4, 4, 4, 4]
+
+
+def test_different_shapes_never_share_a_dispatch(rng):
+    cfg = SVDConfig(eps=1e-8, max_iters=300)
+    with SVDService(max_workers=1, max_batch=8,
+                    batch_window_s=0.25) as svc:
+        a = svc.submit(jnp.asarray(make_lowrank(rng, M, N, SPECTRUM),
+                                   jnp.float32), K, config=cfg)
+        b = svc.submit(jnp.asarray(
+            make_lowrank(rng, 32, 16, SPECTRUM[:16]), jnp.float32),
+            K, config=cfg)
+        assert a.wait(60.0) is JobStatus.DONE
+        assert b.wait(60.0) is JobStatus.DONE
+        recs = {r.job_id: r for r in svc.meter.records}
+    assert recs[a.job_id].batched is False
+    assert recs[b.job_id].batched is False

@@ -1,0 +1,143 @@
+"""Concurrent-solve safety: the audit behind the serving subsystem.
+
+A serving process runs many ``svd()`` calls on one jit cache from a
+thread pool, so per-solve state must be instance state:
+
+* two DIFFERENT inputs solved concurrently must give bitwise the same
+  answers (and the same pass/byte accounting) as solving them
+  serially — no cross-wired counters or telemetry;
+* one SHARED operator instance must refuse an overlapping second
+  solve with the typed ``InputError`` (the 4xx class) instead of
+  silently corrupting both jobs' accounting;
+* sequential reuse of the same operator stays legal (the guard is
+  per-solve, not once-per-operator);
+* the batcher's lru_cached jitted builder must be race-free (one
+  compiled function per signature, whoever asks first).
+"""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_lowrank
+
+from repro.core import DenseOperator, InputError, SVDConfig, svd
+from repro.serving.batcher import batched_block_solve_fn
+
+M, N, K = 48, 24, 4
+SPECTRUM = np.geomspace(10.0, 1e-2, N)
+CFG = SVDConfig(eps=1e-8, max_iters=300)
+
+
+def _solve(A, seed):
+    return svd(A, K, config=CFG.replace(seed=seed))
+
+
+def test_two_threaded_jobs_match_serial_bitwise(rng):
+    """The regression for the shared-mutable-state audit: concurrent
+    solves of independent inputs are bitwise identical to serial."""
+    A = jnp.asarray(make_lowrank(rng, M, N, SPECTRUM), jnp.float32)
+    B = jnp.asarray(make_lowrank(rng, 2 * M, N, SPECTRUM), jnp.float32)
+    serial = [_solve(A, 0), _solve(B, 7)]
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        fa = pool.submit(_solve, A, 0)
+        fb = pool.submit(_solve, B, 7)
+        threaded = [fa.result(120), fb.result(120)]
+    for s, t in zip(serial, threaded):
+        np.testing.assert_array_equal(np.asarray(s.U), np.asarray(t.U))
+        np.testing.assert_array_equal(np.asarray(s.S), np.asarray(t.S))
+        np.testing.assert_array_equal(np.asarray(s.V), np.asarray(t.V))
+        assert s.passes_over_A == t.passes_over_A
+        assert s.bytes_moved == t.bytes_moved
+        assert s.iters.tolist() == t.iters.tolist()
+
+
+def test_shared_operator_concurrent_reuse_raises_input_error(rng):
+    """One operator, two overlapping driver loops: the second must be
+    refused with the typed 4xx error, not silently cross-wire state."""
+    A = jnp.asarray(make_lowrank(rng, M, N, SPECTRUM), jnp.float32)
+    op = DenseOperator(A)
+    inside = threading.Event()
+    release = threading.Event()
+
+    def park(state):
+        inside.set()
+        assert release.wait(30.0)
+
+    def long_solve():
+        return svd(op, K, config=CFG.replace(on_iteration=park,
+                                             force_iters=True,
+                                             max_iters=5))
+
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        fut = pool.submit(long_solve)
+        assert inside.wait(30.0), "first solve never started iterating"
+        try:
+            with pytest.raises(InputError, match="already running"):
+                svd(op, K, config=CFG)
+        finally:
+            release.set()
+        res = fut.result(120)
+    assert res.S.shape == (K,)
+    # the guard released: the operator is reusable again afterwards
+    res2 = svd(op, K, config=CFG)
+    np.testing.assert_allclose(np.asarray(res2.S), np.asarray(res.S),
+                               rtol=1e-4)
+
+
+def test_sequential_reuse_of_one_operator_stays_legal(rng):
+    A = jnp.asarray(make_lowrank(rng, M, N, SPECTRUM), jnp.float32)
+    op = DenseOperator(A)
+    r1 = svd(op, K, config=CFG)
+    r2 = svd(op, K, config=CFG)
+    np.testing.assert_array_equal(np.asarray(r1.S), np.asarray(r2.S))
+    # counters accumulate across solves on a reused operator; each
+    # result still reports only its own solve's passes
+    assert r1.passes_over_A == r2.passes_over_A
+
+
+def test_acquire_release_guard_unit(rng):
+    A = jnp.asarray(make_lowrank(rng, M, N, SPECTRUM), jnp.float32)
+    op = DenseOperator(A)
+    op.acquire_solve()
+    with pytest.raises(InputError, match="already running"):
+        op.acquire_solve()
+    op.release_solve()
+    op.release_solve()          # idempotent: double release is a no-op
+    op.acquire_solve()          # and the claim cycle works again
+    op.release_solve()
+
+
+def test_guard_lazy_init_on_ducktyped_operator(rng):
+    """Operators that skip ``LinearOperator.__init__`` (duck-typed
+    subclasses predating the guard) still get a working lock."""
+    A = jnp.asarray(make_lowrank(rng, M, N, SPECTRUM), jnp.float32)
+    op = DenseOperator.__new__(DenseOperator)
+    op._X = A
+    op.sweep_dtype = "float32"
+    op._passes = 0
+    op._telemetry = None
+    op._retry_policy = None
+    assert "_solve_lock" not in op.__dict__
+    op.acquire_solve()
+    with pytest.raises(InputError):
+        op.acquire_solve()
+    op.release_solve()
+
+
+def test_lru_cached_batch_builder_is_race_free():
+    """N threads asking for the same batch signature must all get the
+    SAME compiled callable (one cache entry, no duplicate compiles)."""
+    sig = (M, N, K, K, "float32", 1e-8, 300, 0)
+    batched_block_solve_fn.cache_clear()
+    barrier = threading.Barrier(4)
+
+    def build():
+        barrier.wait(10)
+        return batched_block_solve_fn(*sig)
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        fns = [f.result(60) for f in [pool.submit(build)
+                                      for _ in range(4)]]
+    assert all(fn is fns[0] for fn in fns)
